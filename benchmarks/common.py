@@ -1,0 +1,18 @@
+"""Shared benchmark utilities. Output contract: ``name,us_per_call,derived``."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+
+def timeit(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

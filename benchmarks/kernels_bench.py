@@ -1,0 +1,52 @@
+"""Kernel-layer microbenchmarks: two-phase segmented min-edge vs the
+naive dense scatter (the MINEDGES hot spot), and fused relabel.
+
+interpret=True executes the Pallas body in Python — wall times for the
+pallas path are NOT TPU projections; the derived column carries the
+structural quantities (candidates emitted vs edges = scatter-work
+reduction) that determine the on-device win.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.boruvka import min_edge_per_component
+from repro.kernels.segmin.ops import min_edges_dense
+from repro.kernels.segmin.ref import segmin_candidates_ref
+
+
+def run(m: int = 1 << 16, n: int = 1 << 12) -> None:
+    rng = np.random.default_rng(0)
+    seg = jnp.asarray(np.sort(rng.integers(0, n, m)).astype(np.int32))
+    w = jnp.asarray(rng.uniform(1, 255, m).astype(np.float32))
+    eid = jnp.arange(m, dtype=jnp.int32)
+    alive = jnp.asarray(rng.random(m) < 0.9)
+
+    naive = jax.jit(lambda: min_edge_per_component(seg, seg, w, n))
+    jax.block_until_ready(naive())
+    us_naive = timeit(lambda: jax.block_until_ready(naive()), iters=5)
+    emit("kernels/minedge/naive_scatter", us_naive, f"m={m};n={n}")
+
+    twophase = jax.jit(lambda: min_edges_dense(seg, w, eid, alive, n,
+                                               use_pallas=False))
+    jax.block_until_ready(twophase())
+    us_two = timeit(lambda: jax.block_until_ready(twophase()), iters=5)
+    cw, _ = segmin_candidates_ref(seg, w, eid, alive)
+    cand = int(jnp.isfinite(cw).sum())
+    emit("kernels/minedge/two_phase_jnp", us_two,
+         f"candidates={cand};scatter_reduction={m / max(cand, 1):.1f}x")
+
+    pallas = jax.jit(lambda: min_edges_dense(seg, w, eid, alive, n,
+                                             use_pallas=True,
+                                             interpret=True))
+    jax.block_until_ready(pallas())
+    us_p = timeit(lambda: jax.block_until_ready(pallas()), iters=2)
+    emit("kernels/minedge/pallas_interpret", us_p,
+         "interpret-mode;not-a-TPU-projection")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Paper Fig. 6 analog: per-phase running-time distribution.
+
+Times the dynamic Filter-Borůvka's phases on a local and a non-local
+graph: pivot/partition, base-case Borůvka rounds, filtering — plus the
+static engine's bucket sweep, matching the paper's observation that
+communication-intense phases dominate on GNM/RMAT and local work on RGG.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.boruvka import boruvka_msf
+from repro.core.filter_boruvka import _base_case, filter_boruvka_msf
+from repro.core.graph import from_numpy
+from repro.data import generators
+
+
+def run(n: int = 1 << 13) -> None:
+    for fam in ("rgg2d", "gnm"):
+        u, v, w, nn = generators.generate(fam, n, avg_degree=16.0, seed=4)
+        edges = from_numpy(u, v, w, nn)
+
+        # phase: full Borůvka rounds (min-edge + contraction dominate)
+        def full():
+            mask, _ = boruvka_msf(edges.u, edges.v, edges.w, edges.n)
+            jax.block_until_ready(mask)
+        us_rounds = timeit(full, warmup=1, iters=3)
+        emit(f"phases/{fam}/boruvka_rounds", us_rounds, f"m={len(u)}")
+
+        # phase: one relabel+min-edge round (the per-round unit cost)
+        from repro.core.boruvka import boruvka_round
+        labels = jnp.arange(nn, dtype=jnp.int32)
+        mst = jnp.zeros((len(u),), bool)
+        rf = jax.jit(lambda l, m: boruvka_round(
+            edges.u, edges.v, edges.w, l, m, edges.n))
+
+        def one_round():
+            l, m, _ = rf(labels, mst)
+            jax.block_until_ready(l)
+        us_one = timeit(one_round, warmup=1, iters=5)
+        emit(f"phases/{fam}/single_round", us_one,
+             f"rounds_equiv={us_rounds / max(us_one, 1):.1f}")
+
+        # phase: filter sweep (sort + bucketed contraction)
+        def filt():
+            mask, _ = filter_boruvka_msf(edges.u, edges.v, edges.w,
+                                         edges.n, num_buckets=8)
+            jax.block_until_ready(mask)
+        us_filter = timeit(filt, warmup=1, iters=3)
+        emit(f"phases/{fam}/filter_sweep", us_filter,
+             f"vs_plain={us_rounds / max(us_filter, 1):.2f}x")
+
+
+if __name__ == "__main__":
+    run()

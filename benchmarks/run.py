@@ -1,0 +1,33 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Figure mapping:
+    weak_scaling   -> Fig. 3 (six graph families, boruvka vs filter)
+    alltoall       -> Fig. 2 (two-level grid vs direct all-to-all)
+    preprocessing  -> Fig. 4 (local contraction on/off)
+    strong_scaling -> Fig. 5 (fixed graph, growing p)
+    phases         -> Fig. 6 (per-phase time distribution)
+    kernels_bench  -> kernel-layer microbenches (MINEDGES hot spot)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (alltoall, kernels_bench, phases, preprocessing,
+                            strong_scaling, weak_scaling)
+    for mod in (weak_scaling, alltoall, preprocessing, strong_scaling,
+                phases, kernels_bench):
+        try:
+            mod.run()
+        except Exception as e:  # keep the harness going; report the row
+            print(f"{mod.__name__}/CRASH,0.0,"
+                  f"{type(e).__name__}:{str(e)[:120]}".replace(",", ";"),
+                  flush=True)
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Capacity-bounded sparse all-to-all (the paper's bulk request/reply).
+
+The paper's algorithms batch arbitrary point-to-point messages into sparse
+``MPI_Alltoallv`` exchanges.  XLA programs need static shapes, so the
+TPU-native equivalent is the *capacity-bounded routed exchange* — the same
+discipline MoE dispatch uses: a [p, capacity, ...] send buffer per device,
+one (optionally two-level, Section VI-A) all-to-all, and an explicit
+overflow count instead of variable message sizes.  Overflow never corrupts
+results: overflowing items are reported back to the caller (``sent_ok``)
+and the dynamic engines retry at a higher capacity.
+
+Primitives:
+  * ``routed_exchange``  — deliver items to destination shards.
+  * ``request_reply``    — full round trip: route requests to their home
+    shard, apply a local answer function, route answers back to the
+    requesting slots (the paper's EXCHANGELABELS pattern).
+
+Used by: distributed MST (ghost-label exchange, redistribution) and the
+MoE layers (token->expert dispatch) — one primitive, two workloads.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.comm.grid_alltoall import all_to_all_nd
+
+
+class ExchangeResult(NamedTuple):
+    recv: jax.Array        # [p, C, ...] received payloads (source-major)
+    recv_ok: jax.Array     # [p, C] bool
+    sent_ok: jax.Array     # [L] bool — item was within capacity
+    dest: jax.Array        # [L] int32 (echoed)
+    slot: jax.Array        # [L] int32 position used in the send buffer
+    overflow: jax.Array    # [] int32, psum'd across devices
+
+
+def _group_positions(dest: jax.Array, valid: jax.Array, p: int) -> jax.Array:
+    """Rank of each item within its destination group (stable)."""
+    L = dest.shape[0]
+    key = jnp.where(valid, dest, p)  # invalid items sort to the end
+    order = jnp.argsort(key, stable=True)
+    sorted_key = key[order]
+    idx = jnp.arange(L, dtype=jnp.int32)
+    first = jnp.searchsorted(sorted_key, sorted_key, side="left"
+                             ).astype(jnp.int32)
+    pos_sorted = idx - first
+    return jnp.zeros((L,), jnp.int32).at[order].set(pos_sorted)
+
+
+def routed_exchange(payload, dest: jax.Array, valid: jax.Array,
+                    capacity: int, axis_names: Sequence[str],
+                    schedule: str = "grid") -> ExchangeResult:
+    """Deliver ``payload[i]`` to shard ``dest[i]``; static [p, C] buffers.
+
+    ``payload`` is a pytree of [L, ...] arrays.  Must run inside shard_map
+    with all ``axis_names`` present.
+    """
+    names = tuple(axis_names)
+    p = 1
+    for n in names:
+        p *= lax.axis_size(n)
+    L = dest.shape[0]
+    pos = _group_positions(dest, valid, p)
+    ok = valid & (pos < capacity) & (dest >= 0) & (dest < p)
+    # predicated scatter: out-of-range rows are dropped
+    d_idx = jnp.where(ok, dest, p)
+    s_idx = jnp.where(ok, pos, 0)
+
+    def scatter(x):
+        buf = jnp.zeros((p, capacity) + x.shape[1:], x.dtype)
+        return buf.at[d_idx, s_idx].set(x, mode="drop")
+
+    send = jax.tree.map(scatter, payload)
+    send_mask = jnp.zeros((p, capacity), bool).at[d_idx, s_idx].set(
+        ok, mode="drop")
+    recv = jax.tree.map(lambda b: all_to_all_nd(b, names, schedule), send)
+    recv_ok = all_to_all_nd(send_mask, names, schedule)
+    overflow = lax.psum(jnp.sum((valid & ~ok).astype(jnp.int32)), names)
+    return ExchangeResult(recv, recv_ok, ok, dest, pos, overflow)
+
+
+def reply(ex: ExchangeResult, answers, axis_names: Sequence[str],
+          schedule: str = "grid"):
+    """Route per-slot ``answers`` ([p, C, ...], aligned with ``ex.recv``)
+    back to the requesting items.  Returns [L, ...] with ``ex.sent_ok``
+    telling which entries are meaningful."""
+    names = tuple(axis_names)
+    back = jax.tree.map(lambda a: all_to_all_nd(a, names, schedule), answers)
+    # item i used buffer position (dest[i], slot[i]); after the return
+    # exchange, that slot holds the answer from shard dest[i].
+    d = jnp.clip(ex.dest, 0, None)
+
+    def gather(b):
+        return b[d, ex.slot]
+
+    return jax.tree.map(gather, back)
+
+
+def request_reply(request, dest: jax.Array, valid: jax.Array,
+                  answer_fn: Callable, capacity: int,
+                  axis_names: Sequence[str], schedule: str = "grid"
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """EXCHANGELABELS pattern: ship requests home, answer, ship answers back.
+
+    ``answer_fn(recv, recv_ok) -> answers`` runs on the home shard with
+    [p, C, ...] inputs.  Returns (answers[L, ...], answered[L] bool,
+    overflow count)."""
+    ex = routed_exchange(request, dest, valid, capacity, axis_names, schedule)
+    answers = answer_fn(ex.recv, ex.recv_ok)
+    out = reply(ex, answers, axis_names, schedule)
+    return out, ex.sent_ok, ex.overflow

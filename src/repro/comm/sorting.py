@@ -1,0 +1,90 @@
+"""Distributed sample sort (AMS-sort analog, Section II-A / VI-C).
+
+The paper uses hypercube quicksort for small inputs and two-level sample
+sort for large ones — data is moved a constant number of times.  The
+shard_map implementation here follows the same structure:
+
+  1. local sort,
+  2. regular oversampling -> allgather -> global splitters,
+  3. one (optionally grid two-level) all-to-all bucket exchange,
+  4. local merge of received runs.
+
+Static shapes: the bucket exchange uses a capacity factor; overflow is
+counted and returned (never silently dropped) — the dynamic caller can
+retry with a larger factor.  Keys are single int32/float32; multi-key
+orders (the lexicographic edge order) are realised by a stable local sort
+of secondary keys before/after the distribution pass, since distribution
+only needs to agree on *which shard* a key lands on.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.comm.exchange import routed_exchange
+
+
+class SortResult(NamedTuple):
+    key: jax.Array      # [cap] locally sorted received keys (+inf padded)
+    payload: tuple      # pytree of [cap, ...]
+    ok: jax.Array       # [cap] bool validity
+    overflow: jax.Array  # [] int32
+
+
+def sample_sort(key: jax.Array, payload, valid: jax.Array,
+                axis_names: Sequence[str], *, oversample: int = 32,
+                capacity_factor: float = 2.0,
+                schedule: str = "grid") -> SortResult:
+    """Globally sort (key, payload) across shards. Inside shard_map."""
+    names = tuple(axis_names)
+    p = 1
+    for n in names:
+        p *= lax.axis_size(n)
+    L = key.shape[0]
+    kf = jnp.where(valid, key, jnp.inf).astype(jnp.float32)
+    order = jnp.argsort(kf, stable=True)
+    ks = kf[order]
+    ps = jax.tree.map(lambda x: x[order], payload)
+    vs = valid[order]
+
+    # regular sampling from the locally sorted *valid* prefix
+    s = min(oversample, L)
+    nvalid = jnp.maximum(jnp.sum(vs.astype(jnp.int32)), 1)
+    samp_idx = (jnp.arange(s) * nvalid) // s
+    samples = ks[samp_idx]
+    all_samples = lax.all_gather(samples, names, tiled=True)  # [p*s]
+    sorted_samples = jnp.sort(all_samples)
+    spl_idx = (jnp.arange(1, p) * (p * s)) // p
+    splitters = sorted_samples[spl_idx]  # [p-1]
+
+    dest = jnp.searchsorted(splitters, ks, side="right").astype(jnp.int32)
+    dest = jnp.where(vs, dest, -1)
+    capacity = max(1, int(-(-L * capacity_factor // p)))
+    ex = routed_exchange((ks,) + tuple(jax.tree.leaves(ps)), dest, vs,
+                         capacity, names, schedule)
+    recv = ex.recv
+    rk = recv[0].reshape(p * capacity)
+    rk = jnp.where(ex.recv_ok.reshape(-1), rk, jnp.inf)
+    rorder = jnp.argsort(rk, stable=True)
+    rk = rk[rorder]
+    treedef = jax.tree.structure(payload)
+    rp = jax.tree.unflatten(
+        treedef,
+        [r.reshape((p * capacity,) + r.shape[2:])[rorder] for r in recv[1:]])
+    rok = ex.recv_ok.reshape(-1)[rorder]
+    return SortResult(rk, rp, rok, ex.overflow)
+
+
+def splitters_from_sorted(ks: jax.Array, p: int, s: int,
+                          axis_names: Sequence[str]) -> jax.Array:
+    """Expose the splitter computation for reuse (redistribution by rank)."""
+    L = ks.shape[0]
+    samp_idx = (jnp.arange(min(s, L)) * L) // min(s, L)
+    samples = ks[samp_idx]
+    all_samples = lax.all_gather(samples, tuple(axis_names), tiled=True)
+    sorted_samples = jnp.sort(all_samples)
+    spl_idx = (jnp.arange(1, p) * sorted_samples.shape[0]) // p
+    return sorted_samples[spl_idx]

@@ -1,0 +1,152 @@
+"""Fully-jittable Borůvka MSF with dense component labels.
+
+This is the workhorse shared by every engine in the framework:
+
+* the single-device reference algorithm,
+* the per-bucket base case of Filter-Borůvka (Section V of the paper),
+* the replicated-vertex base case of the distributed algorithm
+  (Section IV-D, Adler et al.), where the per-vertex min-edge reduction
+  becomes a cross-device ``allReduce(min)`` over dense vertex vectors,
+* the local-preprocessing contraction (Section IV-A) via the
+  ``contractible`` restriction hook.
+
+Design notes (TPU adaptation):
+  The paper's pointer-doubling exchanges request/reply messages between
+  PEs.  On a TPU mesh the natural representation of the vertex->component
+  mapping is a dense vector indexed by vertex id (exactly the paper's own
+  base-case representation), on which pointer doubling is ``labels =
+  labels[labels]`` — a gather that XLA turns into the appropriate
+  collective when the vector is sharded.  All shapes are static; padding
+  edges carry weight +inf and never win a min-reduction.
+
+Tie-breaking: the effective weight order is lexicographic ``(w, edge_id)``
+which is a total order, so the chosen edge set is cycle-free and the MSF
+is unique.  This matches the oracle in ``core/oracle.py``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import EdgeList
+
+
+class BoruvkaState(NamedTuple):
+    labels: jax.Array    # int32 [n] vertex -> component representative
+    mst: jax.Array       # bool  [m] chosen MSF edges
+    changed: jax.Array   # bool  []  did the last round contract anything
+    rounds: jax.Array    # int32 []  rounds executed
+
+
+def _doubling_iters(n: int) -> int:
+    return max(1, math.ceil(math.log2(max(n, 2))))
+
+
+def min_edge_per_component(ru: jax.Array, rv: jax.Array, w: jax.Array,
+                           n: int) -> Tuple[jax.Array, jax.Array]:
+    """Segmented min-edge reduction (the paper's MINEDGES).
+
+    Args: component labels of both endpoints and weights, for m edges.
+    Returns (wmin[n], emin[n]): per-component min incident weight and the
+    index of the lexicographically-(w, idx)-smallest achieving edge.
+    ``emin == m`` (sentinel) where a component has no alive incident edge.
+    """
+    m = w.shape[0]
+    alive = ru != rv
+    wk = jnp.where(alive & jnp.isfinite(w), w, jnp.inf)
+    wmin = jnp.full((n,), jnp.inf, w.dtype)
+    wmin = wmin.at[ru].min(wk)
+    wmin = wmin.at[rv].min(wk)
+    eidx = jnp.arange(m, dtype=jnp.int32)
+    sent = jnp.int32(m)
+    cand_u = jnp.where(jnp.isfinite(wk) & (wk == wmin[ru]), eidx, sent)
+    cand_v = jnp.where(jnp.isfinite(wk) & (wk == wmin[rv]), eidx, sent)
+    emin = jnp.full((n,), sent, jnp.int32)
+    emin = emin.at[ru].min(cand_u)
+    emin = emin.at[rv].min(cand_v)
+    return wmin, emin
+
+
+def contract_components(emin: jax.Array, u: jax.Array, v: jax.Array,
+                        labels: jax.Array, n: int,
+                        root_mask: Optional[jax.Array] = None
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Pseudo-tree -> rooted-star contraction by pointer doubling.
+
+    Returns (roots[n], has[n]): the new representative of every current
+    component label, and whether the component chose an edge this round.
+    ``root_mask`` forces components to stay roots (used for shared
+    vertices in the distributed algorithm, Section IV-B).
+    """
+    m = u.shape[0]
+    sent = jnp.int32(m)
+    has = emin < sent
+    ce = jnp.clip(emin, 0, m - 1)
+    cids = jnp.arange(n, dtype=jnp.int32)
+    cu = labels[u[ce]]
+    cv = labels[v[ce]]
+    other = cu + cv - cids  # the endpoint-component that is not `cids`
+    parent = jnp.where(has, other, cids)
+    if root_mask is not None:
+        parent = jnp.where(root_mask, cids, parent)
+    # Break 2-cycles: the smaller label of the pair becomes the root.
+    gp = parent[parent]
+    parent = jnp.where((gp == cids) & (cids < parent), cids, parent)
+    # Pointer doubling (Section IV-B / Chung & Condon).
+    def double(_, p):
+        return p[p]
+    roots = jax.lax.fori_loop(0, _doubling_iters(n), double, parent)
+    return roots, has
+
+
+def boruvka_round(u: jax.Array, v: jax.Array, w: jax.Array,
+                  labels: jax.Array, mst: jax.Array, n: int,
+                  root_mask: Optional[jax.Array] = None,
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One Borůvka round on dense labels. Returns (labels', mst', changed)."""
+    m = u.shape[0]
+    ru = labels[u]
+    rv = labels[v]
+    _, emin = min_edge_per_component(ru, rv, w, n)
+    roots, has = contract_components(emin, u, v, labels, n, root_mask)
+    ce = jnp.clip(emin, 0, m - 1)
+    mst_i = mst.astype(jnp.int32).at[ce].max(has.astype(jnp.int32))
+    labels = roots[labels]
+    return labels, mst_i.astype(bool), jnp.any(has)
+
+
+@partial(jax.jit, static_argnames=("n", "max_rounds"))
+def boruvka_msf(u: jax.Array, v: jax.Array, w: jax.Array, n: int,
+                max_rounds: Optional[int] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Jittable Borůvka. Returns (mst_mask[m] bool, labels[n] int32)."""
+    m = u.shape[0]
+    if max_rounds is None:
+        # each round at least halves #non-isolated components; a run over
+        # k edges touches <= 2k components.
+        max_rounds = max(1, math.ceil(math.log2(max(min(n, 2 * m), 2))) + 1)
+    init = BoruvkaState(
+        labels=jnp.arange(n, dtype=jnp.int32),
+        mst=jnp.zeros((m,), bool),
+        changed=jnp.array(True),
+        rounds=jnp.int32(0),
+    )
+
+    def cond(s: BoruvkaState):
+        return s.changed & (s.rounds < max_rounds)
+
+    def body(s: BoruvkaState):
+        labels, mst, changed = boruvka_round(u, v, w, s.labels, s.mst, n)
+        return BoruvkaState(labels, mst, changed, s.rounds + 1)
+
+    final = jax.lax.while_loop(cond, body, init)
+    return final.mst, final.labels
+
+
+def boruvka_msf_on(edges: EdgeList, max_rounds: Optional[int] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    return boruvka_msf(edges.u, edges.v, edges.w, edges.n, max_rounds)

@@ -1,0 +1,54 @@
+"""Public MSF API.
+
+``minimum_spanning_forest`` dispatches between:
+  * algorithm: "boruvka" (Section IV) | "filter_boruvka" (Section V)
+  * engine: "static" (fully jittable) | "dynamic" (host-orchestrated
+    recursion with compaction) | "distributed" (shard_map over a device
+    mesh; see core/distributed.py)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.boruvka import boruvka_msf
+from repro.core.filter_boruvka import (boruvka_dynamic, filter_boruvka_dynamic,
+                                       filter_boruvka_msf)
+from repro.core.graph import EdgeList
+
+
+def minimum_spanning_forest(edges: EdgeList, *, algorithm: str = "boruvka",
+                            engine: str = "static",
+                            num_buckets: int = 8,
+                            mesh: Optional[jax.sharding.Mesh] = None,
+                            **kw) -> Tuple[jax.Array, jax.Array]:
+    """Compute an MSF. Returns (mask over edges, total weight)."""
+    if engine == "distributed":
+        from repro.core.distributed import distributed_msf
+        assert mesh is not None, "distributed engine needs a mesh"
+        return distributed_msf(edges, mesh=mesh, algorithm=algorithm, **kw)
+    if engine == "static":
+        if algorithm == "boruvka":
+            mask, _ = boruvka_msf(edges.u, edges.v, edges.w, edges.n)
+        elif algorithm == "filter_boruvka":
+            mask, _ = filter_boruvka_msf(edges.u, edges.v, edges.w, edges.n,
+                                         num_buckets=num_buckets)
+        else:
+            raise ValueError(algorithm)
+        weight = jnp.sum(jnp.where(mask & edges.valid, edges.w, 0.0))
+        return mask, weight
+    if engine == "dynamic":
+        u = np.asarray(edges.u)
+        v = np.asarray(edges.v)
+        w = np.asarray(edges.w)
+        if algorithm == "boruvka":
+            mask, wt = boruvka_dynamic(u, v, w, edges.n)
+        elif algorithm == "filter_boruvka":
+            mask, wt = filter_boruvka_dynamic(u, v, w, edges.n, **kw)
+        else:
+            raise ValueError(algorithm)
+        return jnp.asarray(mask), jnp.asarray(wt, jnp.float32)
+    raise ValueError(engine)

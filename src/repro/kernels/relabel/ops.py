@@ -1,0 +1,22 @@
+"""Jitted public wrapper for the fused relabel kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+
+from repro.kernels.relabel.ref import relabel_ref
+from repro.kernels.relabel.relabel import relabel as relabel_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret",
+                                             "use_pallas"))
+def relabel_edges(u: jax.Array, v: jax.Array, w: jax.Array,
+                  labels: jax.Array, *, block: int = 512,
+                  interpret: bool = True, use_pallas: bool = True
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    if use_pallas:
+        return relabel_pallas(u, v, w, labels, block=block,
+                              interpret=interpret)
+    return relabel_ref(u, v, w, labels)

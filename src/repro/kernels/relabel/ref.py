@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused relabel + self-loop-kill (RELABEL)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def relabel_ref(u: jax.Array, v: jax.Array, w: jax.Array,
+                labels: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Return (ru, rv, w') with w' = +inf for self-loops/padding.
+
+    Self-loops are edges whose endpoints fell into the same component —
+    these are the edges the paper's RELABEL discards; with static shapes
+    they are neutralised instead (weight +inf never wins a reduction).
+    """
+    ru = labels[u]
+    rv = labels[v]
+    dead = (ru == rv) | ~jnp.isfinite(w)
+    wp = jnp.where(dead, jnp.inf, w).astype(w.dtype)
+    return ru, rv, wp

@@ -1,0 +1,32 @@
+"""Jitted public wrapper: dense per-vertex min edges via the segmin kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segmin.ref import (EID_SENTINEL, dense_min_from_candidates,
+                                      segmin_candidates_ref)
+from repro.kernels.segmin.segmin import segmin_candidates
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "block", "interpret", "use_pallas"))
+def min_edges_dense(seg: jax.Array, w: jax.Array, eid: jax.Array,
+                    alive: jax.Array, n: int, *, block: int = 512,
+                    interpret: bool = True, use_pallas: bool = True
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Per-vertex (min weight, argmin eid) over contiguous-run edges.
+
+    Two-phase: Pallas block-segmented scan -> tiny scatter-min combine.
+    ``use_pallas=False`` routes through the pure-jnp oracle (same
+    contract), which is what the CPU test/bench path uses by default.
+    """
+    if use_pallas:
+        cw, ce = segmin_candidates(seg, w, eid, alive, block=block,
+                                   interpret=interpret)
+    else:
+        cw, ce = segmin_candidates_ref(seg, w, eid, alive)
+    return dense_min_from_candidates(seg, cw, ce, n)

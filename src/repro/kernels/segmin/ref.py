@@ -1,0 +1,68 @@
+"""Pure-jnp oracle for the segmented min-edge reduction (MINEDGES).
+
+Given edges sorted by segment id (component of the source endpoint),
+produce per-edge *boundary candidates*: for the last edge of each segment
+run, the (min weight, argmin edge id) of that run; +inf / sentinel
+elsewhere.  A cheap scatter-min over the candidates then yields the dense
+per-vertex minima — the two-phase decomposition that maps the paper's
+Min-Priority-Write onto a TPU (block-local segmented scan in VMEM, tiny
+cross-block combine in HBM).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+EID_SENTINEL = jnp.int32(2 ** 30)
+
+
+def segmin_candidates_ref(seg: jax.Array, w: jax.Array, eid: jax.Array,
+                          alive: jax.Array
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Reference: per-edge boundary candidates via plain segment ops.
+
+    seg:   int32 [M], non-decreasing within the array
+    w:     float32 [M]
+    eid:   int32 [M] (global tie-break id; (w, eid) is the total order)
+    alive: bool [M]
+
+    Returns (cand_w [M], cand_eid [M]) where entry i is the (min w, min
+    eid among w-ties) of seg-run ending at i if i is the last index of its
+    run, else (+inf, sentinel).
+    """
+    m = seg.shape[0]
+    wk = jnp.where(alive, w, jnp.inf)
+    ek = jnp.where(alive, eid, EID_SENTINEL)
+    is_last = jnp.concatenate([seg[1:] != seg[:-1], jnp.array([True])])
+
+    # exact segmented min via scan (reference semantics, O(m))
+    def step(carry, x):
+        cseg, cw, ce = carry
+        s, wv, ev = x
+        new = s != cseg
+        bw = jnp.where(new, wv, jnp.minimum(cw, wv))
+        be = jnp.where(new, ev,
+                       jnp.where(wv < cw, ev,
+                                 jnp.where(wv == cw, jnp.minimum(ce, ev),
+                                           ce)))
+        return (s, bw, be), (bw, be)
+
+    (_, _, _), (run_w, run_e) = jax.lax.scan(
+        step, (jnp.int32(-1), jnp.float32(jnp.inf), EID_SENTINEL),
+        (seg, wk, ek))
+    cand_w = jnp.where(is_last, run_w, jnp.inf)
+    cand_eid = jnp.where(is_last, run_e, EID_SENTINEL)
+    return cand_w, cand_eid
+
+
+def dense_min_from_candidates(seg: jax.Array, cand_w: jax.Array,
+                              cand_eid: jax.Array, n: int
+                              ) -> Tuple[jax.Array, jax.Array]:
+    """Phase 2: scatter the (few) boundary candidates into dense [n]."""
+    wmin = jnp.full((n,), jnp.inf, cand_w.dtype).at[seg].min(cand_w)
+    hit = jnp.isfinite(cand_w) & (cand_w == wmin[seg])
+    e = jnp.where(hit, cand_eid, EID_SENTINEL)
+    emin = jnp.full((n,), EID_SENTINEL, jnp.int32).at[seg].min(e)
+    return wmin, emin

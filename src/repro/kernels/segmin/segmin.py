@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: block-segmented min-edge reduction (MINEDGES).
+
+The paper's hottest per-round primitive is the per-component minimum
+incident edge (Fig. 6 phase "min edge computation"; the shared-memory
+variant uses parlay Min-Priority-Write).  A GPU port would use atomics;
+TPUs have none — the TPU-native decomposition is:
+
+  phase 1 (this kernel): block-local *segmented prefix-min scan* over the
+    lexicographically sorted edge array held in VMEM, emitting per-edge
+    boundary candidates — (min w, argmin eid) at the last edge of every
+    equal-`seg` run, neutral elements elsewhere.  The scan is
+    Hillis-Steele with a run guard: log2(block) unrolled vector steps,
+    pure VPU ops, no gather/scatter, no atomics.  Because the edge array
+    is sorted by source vertex, each source's run is contiguous, so the
+    candidate count per block is the number of distinct sources, not the
+    number of edges.
+
+  phase 2 (ops.py, plain jnp): scatter-min of the candidates into the
+    dense per-vertex vectors — the same dense vectors the replicated
+    base case allReduces (Section IV-D), so the kernel output feeds the
+    distributed pipeline directly.
+
+Run semantics: runs are *contiguous* stretches of equal ``seg``; the seg
+array need not be globally sorted (after contraction, ``seg = labels[u]``
+is only piecewise constant in u), which phase 2 handles by combining
+candidates of runs that share a component.
+
+The (w, eid) pair is reduced lexicographically — the direction-independent
+total order that keeps Borůvka cycle-free under ties.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EID_SENTINEL = 2 ** 30
+
+
+def _segmin_kernel(seg_ref, w_ref, eid_ref, alive_ref, cw_ref, ce_ref,
+                   *, block: int):
+    seg = seg_ref[...]
+    w = w_ref[...].astype(jnp.float32)
+    eid = eid_ref[...]
+    alive = alive_ref[...] != 0
+
+    inf = jnp.float32(jnp.inf)
+    sent = jnp.int32(EID_SENTINEL)
+    val_w = jnp.where(alive, w, inf)
+    val_e = jnp.where(alive, eid, sent)
+
+    # Hillis-Steele segmented prefix-min: after step d the value at i
+    # covers the last 2d elements of its run; min is idempotent, so
+    # over-inclusive windows within one run are harmless.
+    d = 1
+    while d < block:
+        pad_w = jnp.full((d,), inf, jnp.float32)
+        pad_e = jnp.full((d,), sent, jnp.int32)
+        pad_s = jnp.full((d,), -1, seg.dtype)
+        sh_w = jnp.concatenate([pad_w, val_w[:-d]])
+        sh_e = jnp.concatenate([pad_e, val_e[:-d]])
+        sh_s = jnp.concatenate([pad_s, seg[:-d]])
+        same = sh_s == seg
+        better = same & (sh_w < val_w)
+        tie = same & (sh_w == val_w)
+        val_e = jnp.where(better, sh_e,
+                          jnp.where(tie, jnp.minimum(val_e, sh_e), val_e))
+        val_w = jnp.where(better, sh_w, val_w)
+        d *= 2
+
+    # boundary = last edge of its run inside this block
+    nxt = jnp.concatenate([seg[1:], jnp.full((1,), -1, seg.dtype)])
+    is_last = seg != nxt  # the final element always differs from -1
+    cw_ref[...] = jnp.where(is_last, val_w, inf)
+    ce_ref[...] = jnp.where(is_last, val_e, sent)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def segmin_candidates(seg: jax.Array, w: jax.Array, eid: jax.Array,
+                      alive: jax.Array, *, block: int = 512,
+                      interpret: bool = True):
+    """Phase-1 kernel call. Arrays are padded to a multiple of ``block``.
+
+    Padding entries must carry alive=False (any seg value).  Returns
+    (cand_w f32 [M], cand_eid i32 [M]).
+    """
+    m = seg.shape[0]
+    block = min(block, max(m, 8))
+    pad = (-m) % block
+    if pad:
+        seg = jnp.concatenate([seg, jnp.full((pad,), -1, seg.dtype)])
+        w = jnp.concatenate([w, jnp.full((pad,), jnp.inf, w.dtype)])
+        eid = jnp.concatenate([eid, jnp.full((pad,), EID_SENTINEL,
+                                             eid.dtype)])
+        alive = jnp.concatenate([alive, jnp.zeros((pad,), alive.dtype)])
+    mp = seg.shape[0]
+    grid = (mp // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    cand_w, cand_e = pl.pallas_call(
+        functools.partial(_segmin_kernel, block=block),
+        grid=grid,
+        in_specs=[spec, spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((mp,), jnp.float32),
+                   jax.ShapeDtypeStruct((mp,), jnp.int32)],
+        interpret=interpret,
+    )(seg, w, eid, alive.astype(jnp.int8))
+    return cand_w[:m], cand_e[:m]

@@ -1,0 +1,306 @@
+"""Roofline analysis from AOT-compiled artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware model (TPU v5e class, per chip):
+    peak bf16 compute : 197 TFLOP/s
+    HBM bandwidth     : 819 GB/s
+    ICI link bandwidth: ~50 GB/s per link
+
+Three terms per (arch x shape x mesh):
+    compute    = HLO_FLOPs / (chips * peak)
+    memory     = HLO_bytes / (chips * hbm_bw)
+    collective = collective_bytes / (chips * ici_bw)
+
+Sources:
+  * ``compiled.cost_analysis()`` -> flops / bytes accessed.  XLA counts
+    while/scan bodies ONCE, so layer-scanned models are corrected by the
+    probe-extrapolation in dryrun.py (compile at depth L1 and L2, take
+    the per-period delta, extrapolate to the full depth).
+  * collective bytes are NOT in cost_analysis: parsed from the compiled
+    HLO text — operand bytes of every all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute (start variants
+    included, done variants skipped to avoid double counting).
+
+Everything here is per-program (SPMD: one program, `chips` participants);
+cost_analysis FLOPs are per-device for SPMD modules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes / s / chip
+ICI_BW = 50e9            # bytes / s / link (counting one link per hop)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+(?P<res>\([^=]*?\)|\S+)\s+"
+    r"(?P<kind>(?:all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?)\(")
+_GROUPS_COMPACT_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_COMP_HEAD_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_WHILE_RE = re.compile(
+    r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, Tuple[list, bool]]:
+    """name -> (lines, is_entry)."""
+    comps: Dict[str, Tuple[list, bool]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = None
+        if "{" in line and " = " not in s:
+            m = _COMP_HEAD_RE.match(s)
+        if m and not s.startswith("ROOT"):
+            cur = m.group(2)
+            comps[cur] = ([], m.group(1) is not None)
+            continue
+        if cur is not None:
+            if s == "}":
+                cur = None
+            else:
+                comps[cur][0].append(line)
+    return comps
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_COMPACT_RE.search(line)
+    if m:  # replica_groups=[n_groups,group_size]<=[...]
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def _line_collective(line: str) -> Optional[Tuple[str, float, float]]:
+    """Returns (kind, operand_bytes, wire_bytes) for a collective line.
+
+    Newer HLO prints shapes only on results, so sizes derive from the
+    result shape + replica group size G:
+      op              operand        wire (ring, receive-side)
+      all-reduce      R              2R(G-1)/G
+      all-gather      R/G            R(G-1)/G
+      reduce-scatter  R*G            R(G-1)
+      all-to-all      R              R(G-1)/G
+      collective-permute R           R
+    """
+    m = _OP_RE.search(line)
+    if not m:
+        return None
+    kind = m.group("kind").replace("-start", "")
+    res = m.group("res")
+    rbytes = 0.0
+    for dm in _SHAPE_RE.finditer(res):
+        rbytes += _shape_bytes(dm.group(1), dm.group(2))
+    g = _group_size(line)
+    if kind == "all-reduce":
+        op, wire = rbytes, 2.0 * rbytes * (g - 1) / g
+    elif kind == "all-gather":
+        op, wire = rbytes / g, rbytes * (g - 1) / g
+    elif kind == "reduce-scatter":
+        op, wire = rbytes * g, rbytes * (g - 1)
+    elif kind == "all-to-all":
+        op, wire = rbytes, rbytes * (g - 1) / g
+    else:  # collective-permute
+        op, wire = rbytes, rbytes
+    return kind, op, wire
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Weighted sum of collective operand bytes over the HLO module.
+
+    XLA prints while/scan bodies once; this walks the computation graph
+    from ENTRY, multiplying each while body by its trip count (parsed
+    from the loop-condition constant — for data-dependent loops this is
+    the static iteration bound, i.e. a worst-case estimate, flagged in
+    EXPERIMENTS.md).
+    """
+    comps = _split_computations(hlo_text)
+    entry = next((n for n, (_, is_e) in comps.items() if is_e), None)
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    wire: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    if entry is None:
+        return {"total_bytes": 0.0, "wire_bytes": 0.0}
+
+    _CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+
+    def trip_count(cond_name: str, host_comp: str, while_line: str) -> int:
+        # scan the cond computation and any fusion computations it calls
+        names = [cond_name]
+        lines = []
+        seen = set()
+        while names:
+            nm = names.pop()
+            if nm in seen:
+                continue
+            seen.add(nm)
+            ls = comps.get(nm, ([], False))[0]
+            lines.extend(ls)
+            for ln in ls:
+                cm = _CALLS_RE.search(ln)
+                if cm:
+                    names.append(cm.group(1))
+        best = 0
+        for ln in lines:
+            for c in _CONST_RE.finditer(ln):
+                best = max(best, int(c.group(1)))
+        if best:
+            return best
+        # loop-invariant code motion may hoist the bound into the init
+        # tuple: while(%tuple.N) — chase constants feeding that tuple
+        tm = re.search(r"while\(%?([\w\.\-]+)\)", while_line)
+        if tm:
+            host_lines = comps.get(host_comp, ([], False))[0]
+            defs = {}
+            for ln in host_lines:
+                dm = re.match(r"\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=", ln)
+                if dm:
+                    defs[dm.group(1)] = ln
+
+            def chase(opname: str, depth: int) -> int:
+                dl = defs.get(opname, "")
+                cm2 = _CONST_RE.search(dl)
+                if cm2 and "s32[]" in dl:
+                    return int(cm2.group(1))
+                if depth <= 0:
+                    return 0
+                # follow copies / converts one hop
+                nm = re.search(r"(?:copy|convert)\(%?([\w\.\-]+)\)", dl)
+                if nm:
+                    return chase(nm.group(1), depth - 1)
+                return 0
+
+            tup = defs.get(tm.group(1), "")
+            for opm in re.finditer(r"%([\w\.\-]+)", tup.split("tuple(")[-1]):
+                best = max(best, chase(opm.group(1), 3))
+        return max(best, 1)
+
+    seen_stack = set()
+
+    def walk(name: str, weight: float) -> None:
+        if name not in comps or name in seen_stack:
+            return
+        seen_stack.add(name)
+        for line in comps[name][0]:
+            col = _line_collective(line)
+            if col:
+                out[col[0]] += weight * col[1]
+                wire[col[0]] += weight * col[2]
+                counts[col[0]] += weight
+            wm = _WHILE_RE.search(line)
+            if wm:
+                walk(wm.group(2),
+                     weight * trip_count(wm.group(1), name, line))
+                continue
+            cm = _CALL_RE.search(line)
+            if cm:
+                walk(cm.group(1), weight)
+        seen_stack.discard(name)
+
+    walk(entry, 1.0)
+    res = {f"{k}_bytes": v for k, v in out.items()}
+    res.update({f"{k}_wire": v for k, v in wire.items()})
+    res.update({f"{k}_count": c for k, c in counts.items()})
+    res["total_bytes"] = sum(out.values())
+    res["wire_bytes"] = sum(wire.values())
+    return res
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # per device
+    bytes_accessed: float        # per device
+    collective_bytes: float      # per device
+    chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time: max of the three terms (full overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def compute_fraction(self) -> float:
+        """Fraction of roofline: compute term / max term (1.0 = compute
+        bound at peak)."""
+        t = self.step_time_s
+        return self.compute_s / t if t > 0 else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes_accessed,
+            "coll_bytes": self.collective_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "roofline_fraction": self.compute_fraction,
+        }
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis() or {}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def model_flops(cfg, shape_info: Dict, backward: bool) -> float:
+    """Analytic MODEL_FLOPS: 6*N_active*D tokens (train) or 2*N_active*D
+    (forward-only), attention term included for long sequences."""
+    tokens = shape_info["batch"] * (shape_info["seq"]
+                                    if shape_info["kind"] != "decode" else 1)
+    n = cfg.active_param_count()
+    mult = 6.0 if backward else 2.0
+    base = mult * n * tokens
+    # attention score/value flops: 2 * 2 * tokens * ctx * H * hd (fwd)
+    if cfg.family not in ("ssm",):
+        ctx = shape_info["seq"]
+        att = 2 * 2 * tokens * ctx * cfg.num_heads * cfg.hd
+        if shape_info["kind"] == "train":
+            att *= 0.5 * 3.0  # causal half, fwd+bwd
+        base += att * cfg.num_layers
+    return base

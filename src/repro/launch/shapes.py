@@ -1,0 +1,196 @@
+"""Input/state specs per (architecture x shape cell) and step builders.
+
+Every cell is a (kind, seq, batch) triple from the assignment:
+    train_4k     train_step   seq 4096,    global_batch 256
+    prefill_32k  serve prefill seq 32768,  global_batch 32
+    decode_32k   serve_step   1 new token, KV 32768, global_batch 128
+    long_500k    serve_step   1 new token, state 524288, global_batch 1
+                 (sub-quadratic archs only — full-attention archs are
+                 skipped per DESIGN.md and recorded as such)
+
+All arrays are ShapeDtypeStructs (no allocation); shardings follow
+models/sharding.py rules with divisibility-aware fallbacks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import sharding as shd
+from repro.models.model import (MeshContext, forward_decode, forward_prefill,
+                                forward_train, init_caches, init_params)
+from repro.train.optimizer import init_state, state_shardings
+from repro.train.train_loop import TrainConfig, make_train_step
+
+SHAPES: Dict[str, Dict] = {
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"kind": "decode", "seq": 524288, "batch": 1},
+}
+
+
+def cell_supported(cfg: ModelConfig, shape_id: str) -> Tuple[bool, str]:
+    if shape_id == "long_500k" and not cfg.subquadratic:
+        return False, ("full-attention arch: 512k-token cache cell skipped "
+                       "per spec (sub-quadratic attns only); see DESIGN.md")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dp(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    s = 1
+    for a in _dp(mesh):
+        s *= mesh.shape[a]
+    return s
+
+
+def batch_sharding(mesh: Mesh, B: int) -> NamedSharding:
+    dp = _dp(mesh)
+    if B % max(_dp_size(mesh), 1) == 0 and B >= _dp_size(mesh):
+        return NamedSharding(mesh, P(dp))
+    return NamedSharding(mesh, P())
+
+
+def _generic_sharding(leaf, mesh: Mesh, B: int,
+                      mode: str = "feature") -> NamedSharding:
+    """Caches/stubs: batch dim over DP (if divisible), plus 'model' on
+    either the last divisible feature dim (mode="feature") or the
+    sequence dim (mode="sequence", flash-decoding style length split —
+    the §Perf fix for KV-head counts below the TP degree)."""
+    dp = _dp(mesh)
+    dsz = _dp_size(mesh)
+    msz = mesh.shape["model"]
+    spec = [None] * leaf.ndim
+    for i, d in enumerate(leaf.shape):
+        if d == B and d % dsz == 0 and d >= dsz:
+            spec[i] = dp if len(dp) > 1 else dp[0]
+            break
+    order = range(leaf.ndim - 1, -1, -1)
+    if mode == "sequence" and leaf.ndim >= 4:
+        order = [2] + [i for i in range(leaf.ndim - 1, -1, -1) if i != 2]
+    for i in order:
+        if spec[i] is None and leaf.shape[i] % msz == 0 \
+                and leaf.shape[i] >= msz and i != 0:
+            spec[i] = "model"
+            break
+    return NamedSharding(mesh, P(*spec))
+
+
+def model_inputs(cfg: ModelConfig, shape_id: str, mesh: Mesh):
+    """Returns (input tree of SDS, matching shardings tree)."""
+    info = SHAPES[shape_id]
+    B, S = info["batch"], info["seq"]
+    bsh = batch_sharding(mesh, B)
+    rep = NamedSharding(mesh, P())
+    if info["kind"] in ("train", "prefill"):
+        batch = {"tokens": _sds((B, S), jnp.int32),
+                 "labels": _sds((B, S), jnp.int32)}
+        shard = {"tokens": bsh, "labels": bsh}
+        if cfg.frontend == "patch":
+            batch["patch_embeds"] = _sds((B, cfg.frontend_len, cfg.d_model),
+                                         jnp.bfloat16)
+            shard["patch_embeds"] = _generic_sharding(
+                batch["patch_embeds"], mesh, B)
+        if cfg.frontend == "audio":
+            batch["frames"] = _sds((B, cfg.frontend_len, cfg.d_model),
+                                   jnp.bfloat16)
+            shard["frames"] = _generic_sharding(batch["frames"], mesh, B)
+        return batch, shard
+    # decode
+    caches = jax.eval_shape(partial(init_caches, cfg, B, S))
+    cshard = jax.tree.map(
+        lambda l: _generic_sharding(l, mesh, B, mode=cfg.cache_shard),
+        caches)
+    tokens = _sds((B,), jnp.int32)
+    pos = _sds((B,), jnp.int32)
+    tsh = batch_sharding(mesh, B)
+    return {"caches": caches, "tokens": tokens, "pos": pos}, \
+           {"caches": cshard, "tokens": tsh, "pos": tsh}
+
+
+def params_and_shardings(cfg: ModelConfig, mesh: Mesh):
+    pshape = jax.eval_shape(partial(init_params, cfg), jax.random.key(0))
+    return pshape, shd.param_shardings(pshape, mesh)
+
+
+def build_step(cfg: ModelConfig, shape_id: str, mesh: Mesh,
+               remat: bool = True, donate_caches: bool = False):
+    """Returns (fn, arg_sds tuple, in_shardings tuple, out_shardings[,
+    donate]).  ``donate_caches`` aliases decode KV buffers in-place
+    (§Perf: halves the decode memory term by eliding the cache copy)."""
+    info = SHAPES[shape_id]
+    mesh_ctx = MeshContext(mesh, _dp(mesh), ("model",))
+    pshape, pshard = params_and_shardings(cfg, mesh)
+    inputs, ishard = model_inputs(cfg, shape_id, mesh)
+    rep = NamedSharding(mesh, P())
+
+    if info["kind"] == "train":
+        tc = TrainConfig()
+        step = make_train_step(cfg, tc, mesh_ctx)
+        oshape = jax.eval_shape(init_state, pshape)
+        oshard = state_shardings(shd.valid_param_specs(pshape, mesh),
+                                 pshape, mesh)
+        args = (pshape, oshape, inputs)
+        in_sh = (pshard, oshard, ishard)
+        out_sh = (pshard, oshard, None)
+        return step, args, in_sh, out_sh
+    if info["kind"] == "prefill":
+        def step(params, batch):
+            return forward_prefill(cfg, params, batch, mesh_ctx)
+        args = (pshape, inputs)
+        in_sh = (pshard, ishard)
+        return step, args, in_sh, None
+    # decode
+    def step(params, caches, tokens, pos):
+        return forward_decode(cfg, params, caches, tokens, pos, mesh_ctx)
+    args = (pshape, inputs["caches"], inputs["tokens"], inputs["pos"])
+    in_sh = (pshard, ishard["caches"], ishard["tokens"], ishard["pos"])
+    logits_sh = None
+    if cfg.shard_logits and cfg.vocab_size % mesh.shape["model"] == 0:
+        # serving keeps logits vocab-sharded (sample via sharded argmax)
+        dp = _dp(mesh)
+        B = SHAPES[shape_id]["batch"]
+        bdim = dp if (B % _dp_size(mesh) == 0 and B >= _dp_size(mesh)) \
+            else None
+        logits_sh = NamedSharding(mesh, P(bdim, "model"))
+    out_sh = (logits_sh, ishard["caches"])
+    if donate_caches:
+        return step, args, in_sh, out_sh, (1,)
+    return step, args, in_sh, out_sh
+
+
+def probe_configs(cfg: ModelConfig) -> Optional[Tuple[ModelConfig,
+                                                      ModelConfig, int]]:
+    """Two reduced-depth configs (L1, L2) and the period count for
+    per-layer cost extrapolation (scan bodies are counted once by XLA
+    cost analysis — see launch/roofline.py)."""
+    if cfg.family == "hybrid":
+        return None  # python-unrolled stack: raw costs are complete
+    f = cfg.first_dense_layers
+    p = cfg.moe_every if cfg.is_moe else 1
+    L1, L2 = f + p, f + 2 * p
+    n_periods = (cfg.num_layers - f) // p
+    if n_periods < 2:
+        return None
+    kw = dict(num_layers=L1, scan_unroll=True)
+    kw2 = dict(num_layers=L2, scan_unroll=True)
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = 1
+        kw2["encoder_layers"] = 2
+    c1 = dataclasses.replace(cfg, **kw)
+    c2 = dataclasses.replace(cfg, **kw2)
+    return c1, c2, n_periods

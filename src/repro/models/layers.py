@@ -1,0 +1,405 @@
+"""Common transformer building blocks (pure JAX, einsum-based).
+
+Conventions:
+  * activations [B, S, D]; weights carry explicit head dims so sharding
+    rules can target them by path (see models/sharding.py)
+  * fp32 for norms/softmax accumulation, bf16 (cfg.dtype) elsewhere
+  * decode paths take a KVCache and a position index; shapes are static
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale + bias).astype(x.dtype)
+
+
+# -- RoPE -------------------------------------------------------------------
+
+def rope_cos_sin(positions: jax.Array, dim: int, theta: float
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """positions [.. S] -> (cos, sin) [.., S, dim//2], fp32."""
+    half = dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [B, S, H, hd] (split-half convention), cos/sin [B or 1, S, hd//2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # broadcast over heads
+    s = sin[..., None, :]
+    xf1 = x1.astype(jnp.float32)
+    xf2 = x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- FFN --------------------------------------------------------------------
+
+def swiglu(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array
+           ) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, wg.astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, wu.astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, wd.astype(x.dtype))
+
+
+def gelu_mlp(x: jax.Array, wi: jax.Array, bi: jax.Array, wo: jax.Array,
+             bo: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, wi.astype(x.dtype)) + bi)
+    return jnp.einsum("bsf,fd->bsd", h, wo.astype(x.dtype)) + bo
+
+
+# -- attention core ---------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, T, KV, hd]
+    v: jax.Array  # [B, T, KV, hd]
+
+
+class QuantKVCache(NamedTuple):
+    """int8 KV cache with per-(token, head) symmetric scales (§Perf:
+    halves the decode memory term vs bf16; KIVI/KVQuant-style)."""
+    k_q: jax.Array      # int8 [B, T, KV, hd]
+    k_scale: jax.Array  # f32  [B, T, KV]
+    v_q: jax.Array      # int8 [B, T, KV, hd]
+    v_scale: jax.Array  # f32  [B, T, KV]
+
+
+def _quant_kv(x: jax.Array):
+    """x [B, KV, hd] -> (int8, scale[B, KV])."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array,
+          mask: Optional[jax.Array], scale: float) -> jax.Array:
+    """q [B,S,H,hd]; k,v [B,T,KV,hd]; GQA via head grouping. fp32 softmax."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores * scale
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(B, S, H, hd)
+
+
+def causal_mask(S: int, dtype=bool) -> jax.Array:
+    return jnp.tril(jnp.ones((S, S), dtype))
+
+
+def _sdpa_blockwise(q: jax.Array, k: jax.Array, v: jax.Array,
+                    scale: float, causal: bool, block: int) -> jax.Array:
+    """Flash-style attention: online softmax over KV chunks.
+
+    Never materialises [B, H, S, T]; peak intermediate is
+    [B, KV, G, S, block].  This is the §Perf memory-term optimization —
+    on TPU the same tiling becomes a Pallas kernel; expressed here with
+    lax.scan so XLA fuses each chunk's score/softmax/weighted-sum.
+    q [B,S,H,hd]; k,v [B,T,KV,hd].
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    blk = min(block, T)
+    pad = (-T) % blk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Tp = T + pad
+    nb = Tp // blk
+    qg = (q.reshape(B, S, KV, G, hd) * scale).astype(q.dtype)
+    kb = k.reshape(B, nb, blk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, blk, KV, hd).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(S)
+
+    def chunk(carry, inp):
+        m, l, acc = carry                      # running max / sum / out
+        kc, vc, start = inp                    # [B, blk, KV, hd]
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, kc).astype(jnp.float32)
+        kpos = start + jnp.arange(blk)
+        dead = kpos[None, :] >= T + jnp.zeros((1,), jnp.int32)
+        if causal:
+            dead = dead | (kpos[None, :] > qpos[:, None])
+        s = jnp.where(dead[None, None, None], -1e30, s)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p.astype(q.dtype), vc).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, S), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, S, hd), jnp.float32)
+    starts = jnp.arange(nb, dtype=jnp.int32) * blk
+    (m, l, acc), _ = jax.lax.scan(chunk, (m0, l0, a0), (kb, vb, starts))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd).astype(q.dtype)
+
+
+def gqa_attention(cfg: ModelConfig, p: dict, x: jax.Array,
+                  positions: jax.Array,
+                  cache: Optional[KVCache] = None,
+                  cache_pos: Optional[jax.Array] = None,
+                  kv_source: Optional[jax.Array] = None,
+                  causal: bool = True,
+                  use_rope: bool = True
+                  ) -> Tuple[jax.Array, Optional[KVCache]]:
+    """Standard GQA attention with optional KV cache / cross-attention.
+
+    cache + cache_pos: decode mode — insert the new K/V at ``cache_pos``
+    and attend to positions <= cache_pos (static cache length).
+    kv_source: encoder states for cross-attention (no cache, no mask).
+    """
+    B, S, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    src = x if kv_source is None else kv_source
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(x.dtype))
+    if cfg.attn_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if use_rope and kv_source is None:
+        cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    scale = 1.0 / (hd ** 0.5)
+
+    new_cache = None
+    if isinstance(cache, QuantKVCache):
+        # int8 cache: quantise the new entry, attend over the dequantised
+        # buffer (int8 reads halve the decode memory term vs bf16)
+        T = cache.k_q.shape[1]
+        idx = cache_pos
+        bidx = jnp.arange(B)
+        kq, ks = _quant_kv(k[:, 0])
+        vq, vs = _quant_kv(v[:, 0])
+        new_cache = QuantKVCache(
+            cache.k_q.at[bidx, idx].set(kq),
+            cache.k_scale.at[bidx, idx].set(ks),
+            cache.v_q.at[bidx, idx].set(vq),
+            cache.v_scale.at[bidx, idx].set(vs))
+        ck = (new_cache.k_q.astype(x.dtype)
+              * new_cache.k_scale[..., None].astype(x.dtype))
+        cv = (new_cache.v_q.astype(x.dtype)
+              * new_cache.v_scale[..., None].astype(x.dtype))
+        tpos = jnp.arange(T)[None, :]
+        mask = (tpos <= idx[:, None])[:, None, :]
+        out = _sdpa(q, ck, cv, mask, scale)
+    elif cache is not None:
+        # decode: write the new entries, attend over the whole buffer
+        T = cache.k.shape[1]
+        idx = cache_pos  # [B] int32 — current write position
+        bidx = jnp.arange(B)
+        ck = cache.k.at[bidx, idx].set(k[:, 0])
+        cv = cache.v.at[bidx, idx].set(v[:, 0])
+        new_cache = KVCache(ck, cv)
+        tpos = jnp.arange(T)[None, :]
+        mask = (tpos <= idx[:, None])[:, None, :]  # [B, 1, T]
+        out = _sdpa(q, ck, cv, mask, scale)
+    elif kv_source is not None:
+        if cfg.attn_impl == "blockwise":
+            out = _sdpa_blockwise(q, k, v, scale, False, cfg.attn_block)
+        else:
+            out = _sdpa(q, k, v, None, scale)
+    elif cfg.attn_impl == "blockwise":
+        out = _sdpa_blockwise(q, k, v, scale, causal, cfg.attn_block)
+    else:
+        mask = causal_mask(S)[None] if causal else None
+        out = _sdpa(q, k, v, mask, scale)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+# -- MLA (multi-head latent attention, DeepSeek-V2) --------------------------
+
+class MLACache(NamedTuple):
+    latent: jax.Array  # [B, T, kv_lora + rope_head_dim]
+
+
+def mla_attention(cfg: ModelConfig, p: dict, x: jax.Array,
+                  positions: jax.Array,
+                  cache: Optional[MLACache] = None,
+                  cache_pos: Optional[jax.Array] = None,
+                  causal: bool = True
+                  ) -> Tuple[jax.Array, Optional[MLACache]]:
+    """MLA: low-rank KV latent cache (kv_lora) + decoupled RoPE key.
+
+    The cache stores the compressed latent (kv_lora + rope_head_dim per
+    token) — the memory-side point of MLA — and K/V are re-expanded from
+    it through ``wkv_b`` at attention time.
+    """
+    B, S, D = x.shape
+    H, hd, r = cfg.num_heads, cfg.hd, cfg.rope_head_dim
+    lo = cfg.kv_lora_rank
+
+    # queries through the q-LoRA bottleneck
+    q_lat = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(x.dtype))
+    q_lat = rmsnorm(q_lat, p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, p["wq_b"].astype(x.dtype))
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+
+    # KV latent (+ decoupled rope key channel, shared across heads)
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(x.dtype))
+    latent, k_rope_in = kv[..., :lo], kv[..., lo:]
+    latent = rmsnorm(latent, p["kv_norm"], cfg.norm_eps)
+
+    cos, sin = rope_cos_sin(positions, r, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope_in[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    packed = jnp.concatenate([latent, k_rope], axis=-1)  # [B, S, lo+r]
+
+    new_cache = None
+    if cache is not None:
+        T = cache.latent.shape[1]
+        bidx = jnp.arange(B)
+        buf = cache.latent.at[bidx, cache_pos].set(packed[:, 0])
+        new_cache = MLACache(buf)
+        packed_all = buf
+        tpos = jnp.arange(T)[None, :]
+        mask = (tpos <= cache_pos[:, None])[:, None, :]
+    else:
+        packed_all = packed
+        mask = causal_mask(S)[None] if causal else None
+
+    scale = 1.0 / ((hd + r) ** 0.5)
+    if cache is not None and cfg.mla_absorb:
+        # absorbed-weight decode: fold wkv_b into the query and output so
+        # attention runs in the latent space — the cached latents are
+        # never re-expanded (the classic MLA serving optimization; cuts
+        # per-step attention flops by ~2*hd/lo per position)
+        lat_all = packed_all[..., :lo]
+        k_rope_all = packed_all[..., lo:]
+        wk_abs = p["wkv_b"][..., :hd].astype(x.dtype)   # [lo, H, hd]
+        wv_abs = p["wkv_b"][..., hd:].astype(x.dtype)   # [lo, H, hd]
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, wk_abs)
+        s_nope = jnp.einsum("bshr,btr->bhst", q_lat, lat_all)
+        s_rope = jnp.einsum("bshk,btk->bhst", q_rope, k_rope_all)
+        scores = (s_nope + s_rope).astype(jnp.float32) * scale
+        if mask is not None:
+            scores = jnp.where(mask[:, None] if mask.ndim == 3 else mask,
+                               scores, -1e30)
+        wgt = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        ctx = jnp.einsum("bhst,btr->bshr", wgt, lat_all)
+        out = jnp.einsum("bshr,rhk->bshk", ctx, wv_abs)
+    elif cfg.attn_impl == "blockwise" and cache is None:
+        out = _mla_blockwise(q_nope, q_rope, packed_all, p["wkv_b"], lo, hd,
+                             scale, causal, cfg.attn_block)
+    else:
+        lat_all = packed_all[..., :lo]
+        k_rope_all = packed_all[..., lo:]
+        # expand K (nope part) and V from the latent
+        kvex = jnp.einsum("btr,rhk->bthk", lat_all,
+                          p["wkv_b"].astype(x.dtype))
+        k_nope, v = kvex[..., :hd], kvex[..., hd:]
+        s_nope = jnp.einsum("bshk,bthk->bhst", q_nope, k_nope)
+        s_rope = jnp.einsum("bshk,btk->bhst", q_rope, k_rope_all)
+        scores = (s_nope + s_rope).astype(jnp.float32) * scale
+        if mask is not None:
+            scores = jnp.where(mask[:, None] if mask.ndim == 3 else mask,
+                               scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhst,bthk->bshk", w, v)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+def _mla_blockwise(q_nope: jax.Array, q_rope: jax.Array,
+                   packed: jax.Array, wkv_b: jax.Array, lo: int, hd: int,
+                   scale: float, causal: bool, block: int) -> jax.Array:
+    """Blockwise MLA: chunk the *latent* cache, expand K/V per chunk.
+
+    Avoids both the [B,H,S,T] score tensor and the full [B,T,H,2hd]
+    latent expansion — the expansion itself is re-done per chunk (compute
+    for memory, the same trade remat makes).
+    """
+    B, S, H, _ = q_nope.shape
+    T = packed.shape[1]
+    blk = min(block, T)
+    pad = (-T) % blk
+    if pad:
+        packed = jnp.pad(packed, ((0, 0), (0, pad), (0, 0)))
+    nb = (T + pad) // blk
+    pc = packed.reshape(B, nb, blk, packed.shape[-1]).transpose(1, 0, 2, 3)
+    qpos = jnp.arange(S)
+    wkv = wkv_b.astype(q_nope.dtype)
+
+    def pin(t, spec):
+        """Keep the chunked online-softmax internals head-sharded: GSPMD
+        otherwise re-shards the fp32 carries through the bwd scan with
+        full-rematerialisation gathers (§Perf, deepseek-v2 iteration 5)."""
+        try:
+            mesh = jax.sharding.get_abstract_mesh()
+            if mesh is not None and "model" in mesh.axis_names \
+                    and t.shape[1] % mesh.shape["model"] == 0:
+                return jax.lax.with_sharding_constraint(t, spec)
+        except Exception:
+            pass
+        return t
+
+    from jax.sharding import PartitionSpec as _P
+
+    def chunk(carry, inp):
+        m, l, acc = carry
+        lat_c, start = inp                       # [B, blk, lo + r]
+        kvex = jnp.einsum("btr,rhk->bthk", lat_c[..., :lo], wkv)
+        k_nope_c, v_c = kvex[..., :hd], kvex[..., hd:]
+        s = (jnp.einsum("bshk,bthk->bhst", q_nope, k_nope_c)
+             + jnp.einsum("bshk,btk->bhst", q_rope, lat_c[..., lo:])
+             ).astype(jnp.float32) * scale
+        s = pin(s, _P(None, "model", None, None))
+        kpos = start + jnp.arange(blk)
+        dead = kpos[None, :] >= T
+        if causal:
+            dead = dead | (kpos[None, :] > qpos[:, None])
+        s = jnp.where(dead[None, None], -1e30, s)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p_ = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p_.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhst,bthk->bhsk", p_.astype(q_nope.dtype), v_c
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = pin(jnp.full((B, H, S), -jnp.inf, jnp.float32),
+             _P(None, "model", None))
+    l0 = pin(jnp.zeros((B, H, S), jnp.float32), _P(None, "model", None))
+    a0 = pin(jnp.zeros((B, H, S, hd), jnp.float32),
+             _P(None, "model", None, None))
+    starts = jnp.arange(nb, dtype=jnp.int32) * blk
+    (m, l, acc), _ = jax.lax.scan(chunk, (m0, l0, a0), (pc, starts))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q_nope.dtype)

@@ -1,0 +1,668 @@
+"""Model assembly: init / train-forward / prefill / decode per family.
+
+Layer stacks are scanned (``lax.scan`` over parameter stacks with
+``jax.checkpoint`` remat) so the lowered HLO stays one-layer-sized — this
+is what keeps 80-layer × 512-device AOT compiles tractable and is also the
+production choice (less HLO, better XLA scheduling).
+
+Families:
+  dense / vlm      — [ln, GQA, ln, SwiGLU] x L  (vlm: patch-prefix stub)
+  moe              — GQA + (routed experts | dense) per the layer pattern
+  ssm              — Mamba2 mixer x L
+  hybrid (zamba2)  — Mamba2 backbone + one *shared-weight* attention block
+                     applied every ``shared_attn_every`` layers
+  audio (whisper)  — encoder (bidirectional, learned pos, GELU) + decoder
+                     (causal self-attn + cross-attn); conv frontend is a
+                     stub: encoder consumes precomputed frame embeddings
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as moe_lib
+from repro.models.layers import (KVCache, MLACache, QuantKVCache,
+                                 causal_mask, gelu_mlp, gqa_attention,
+                                 layernorm, mla_attention, rmsnorm, swiglu)
+from repro.models.ssm import SSMState, mamba2_block, ssm_dims
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshContext:
+    mesh: Any
+    dp_axes: Tuple[str, ...]
+    ep_axes: Tuple[str, ...]
+
+    @property
+    def ep_size(self) -> int:
+        s = 1
+        for a in self.ep_axes:
+            s *= self.mesh.shape[a]
+        return s
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _dense(key, shape, dtype, scale=0.02):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def _attn_params(cfg: ModelConfig, key, L: Optional[int], dt) -> Dict:
+    H, KV, hd, D = cfg.num_heads, cfg.num_kv_heads, cfg.hd, cfg.d_model
+    pre = (L,) if L is not None else ()
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": _dense(ks[0], pre + (D, H, hd), dt),
+        "wk": _dense(ks[1], pre + (D, KV, hd), dt),
+        "wv": _dense(ks[2], pre + (D, KV, hd), dt),
+        "wo": _dense(ks[3], pre + (H, hd, D), dt),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros(pre + (H, hd), dt)
+        p["bk"] = jnp.zeros(pre + (KV, hd), dt)
+        p["bv"] = jnp.zeros(pre + (KV, hd), dt)
+    return p
+
+
+def _mla_params(cfg: ModelConfig, key, L: Optional[int], dt) -> Dict:
+    D, H, hd, r = cfg.d_model, cfg.num_heads, cfg.hd, cfg.rope_head_dim
+    lo, qlo = cfg.kv_lora_rank, cfg.q_lora_rank
+    pre = (L,) if L is not None else ()
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": _dense(ks[0], pre + (D, qlo), dt),
+        "q_norm": jnp.ones(pre + (qlo,), dt),
+        "wq_b": _dense(ks[1], pre + (qlo, H, hd + r), dt),
+        "wkv_a": _dense(ks[2], pre + (D, lo + r), dt),
+        "kv_norm": jnp.ones(pre + (lo,), dt),
+        "wkv_b": _dense(ks[3], pre + (lo, H, 2 * hd), dt),
+        "wo": _dense(ks[4], pre + (H, hd, D), dt),
+    }
+
+
+def _mlp_params(cfg: ModelConfig, key, L: Optional[int], dt,
+                d_ff: Optional[int] = None) -> Dict:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    pre = (L,) if L is not None else ()
+    ks = jax.random.split(key, 3)
+    return {
+        "wg": _dense(ks[0], pre + (D, F), dt),
+        "wu": _dense(ks[1], pre + (D, F), dt),
+        "wd": _dense(ks[2], pre + (F, D), dt),
+    }
+
+
+def _moe_params(cfg: ModelConfig, key, L: Optional[int], dt) -> Dict:
+    D, E, Fe = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    pre = (L,) if L is not None else ()
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": _dense(ks[0], pre + (D, E), jnp.float32),
+        "wg": _dense(ks[1], pre + (E, D, Fe), dt),
+        "wu": _dense(ks[2], pre + (E, D, Fe), dt),
+        "wd": _dense(ks[3], pre + (E, Fe, D), dt),
+    }
+    if cfg.num_shared_experts:
+        Fs = cfg.num_shared_experts * Fe
+        p["shared_wg"] = _dense(ks[4], pre + (D, Fs), dt)
+        p["shared_wu"] = _dense(ks[5], pre + (D, Fs), dt)
+        p["shared_wd"] = _dense(ks[6], pre + (Fs, D), dt)
+    return p
+
+
+def _mamba_params(cfg: ModelConfig, key, L: Optional[int], dt) -> Dict:
+    H, Pd, N = ssm_dims(cfg)
+    D = cfg.d_model
+    inner = H * Pd
+    proj_out = 2 * inner + 2 * N + H
+    conv_ch = inner + 2 * N
+    pre = (L,) if L is not None else ()
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": _dense(ks[0], pre + (D, proj_out), dt),
+        "conv_w": _dense(ks[1], pre + (cfg.conv_width, conv_ch), dt, 0.2),
+        "dt_bias": jnp.zeros(pre + (H,), jnp.float32),
+        "A_log": jnp.zeros(pre + (H,), jnp.float32),
+        "D": jnp.ones(pre + (H,), dt),
+        "norm": jnp.ones(pre + (inner,), dt),
+        "out_proj": _dense(ks[2], pre + (inner, D), dt),
+    }
+
+
+def _norm(pre, D, dt):
+    return jnp.ones(pre + (D,), dt)
+
+
+def layer_pattern(cfg: ModelConfig) -> Sequence[str]:
+    """Per-layer kind for MoE stacks: 'dense' | 'moe'."""
+    if not cfg.is_moe:
+        return ["dense"] * cfg.num_layers
+    pat = []
+    moe_every = cfg.moe_every
+    for i in range(cfg.num_layers):
+        if i < cfg.first_dense_layers:
+            pat.append("dense")
+        elif (i - cfg.first_dense_layers) % moe_every == moe_every - 1 \
+                or moe_every == 1:
+            pat.append("moe")
+        else:
+            pat.append("dense")
+    return pat
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict:
+    dt = cfg.jdtype
+    D, V, L = cfg.d_model, cfg.vocab_size, cfg.num_layers
+    ks = jax.random.split(key, 16)
+    params: Dict[str, Any] = {
+        "embed": _dense(ks[0], (V, D), dt, 1.0),
+        "unembed": _dense(ks[1], (D, V), dt),
+        "final_norm": jnp.ones((D,), dt),
+    }
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        params["blocks"] = {
+            "ln1": _norm((L,), D, dt),
+            "ln2": _norm((L,), D, dt),
+            "attn": _attn_params(cfg, ks[2], L, dt),
+            "mlp": _mlp_params(cfg, ks[3], L, dt),
+        }
+    elif fam == "moe":
+        pat = layer_pattern(cfg)
+        nd = sum(1 for k in pat if k == "dense")
+        nm = L - nd
+        attn_fn = _mla_params if cfg.kv_lora_rank else _attn_params
+        if nd:
+            params["dense_blocks"] = {
+                "ln1": _norm((nd,), D, dt),
+                "ln2": _norm((nd,), D, dt),
+                "attn": attn_fn(cfg, ks[2], nd, dt),
+                "mlp": _mlp_params(cfg, ks[3], nd, dt),
+            }
+        params["moe_blocks"] = {
+            "ln1": _norm((nm,), D, dt),
+            "ln2": _norm((nm,), D, dt),
+            "attn": attn_fn(cfg, ks[4], nm, dt),
+            "moe": _moe_params(cfg, ks[5], nm, dt),
+        }
+    elif fam == "ssm":
+        params["blocks"] = {
+            "ln": _norm((L,), D, dt),
+            "mixer": _mamba_params(cfg, ks[2], L, dt),
+        }
+    elif fam == "hybrid":
+        params["blocks"] = {
+            "ln": _norm((L,), D, dt),
+            "mixer": _mamba_params(cfg, ks[2], L, dt),
+        }
+        params["shared_attn"] = {
+            "ln1": _norm((), D, dt),
+            "ln2": _norm((), D, dt),
+            "attn": _attn_params(cfg, ks[3], None, dt),
+            "mlp": _mlp_params(cfg, ks[4], None, dt),
+        }
+    elif fam == "audio":
+        Le = cfg.encoder_layers
+        params["enc_pos"] = _dense(ks[6], (cfg.frontend_len, D), dt)
+        # whisper publishes 448 learned positions; the assigned decode
+        # cells need 32k — the table is enlarged structurally (DESIGN.md)
+        params["dec_pos"] = _dense(ks[7], (32768, D), dt)
+        params["enc_blocks"] = {
+            "ln1": _norm((Le,), D, dt),
+            "ln2": _norm((Le,), D, dt),
+            "attn": _attn_params(cfg, ks[2], Le, dt),
+            "mlp": {
+                "wi": _dense(ks[8], (Le, D, cfg.d_ff), dt),
+                "bi": jnp.zeros((Le, cfg.d_ff), dt),
+                "wo": _dense(ks[9], (Le, cfg.d_ff, D), dt),
+                "bo": jnp.zeros((Le, D), dt),
+            },
+        }
+        params["enc_final_norm"] = jnp.ones((D,), dt)
+        params["dec_blocks"] = {
+            "ln1": _norm((L,), D, dt),
+            "ln_x": _norm((L,), D, dt),
+            "ln2": _norm((L,), D, dt),
+            "attn": _attn_params(cfg, ks[3], L, dt),
+            "xattn": _attn_params(cfg, ks[4], L, dt),
+            "mlp": {
+                "wi": _dense(ks[10], (L, D, cfg.d_ff), dt),
+                "bi": jnp.zeros((L, cfg.d_ff), dt),
+                "wo": _dense(ks[11], (L, cfg.d_ff, D), dt),
+                "bo": jnp.zeros((L, D), dt),
+            },
+        }
+    else:
+        raise ValueError(fam)
+    return params
+
+
+# --------------------------------------------------------------------------
+# block applications
+# --------------------------------------------------------------------------
+
+def _dense_block(cfg, lp, x, positions, cache=None, cache_pos=None):
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    attn = mla_attention if cfg.kv_lora_rank else gqa_attention
+    attn_out, new_cache = attn(cfg, lp["attn"], h, positions,
+                               cache=cache, cache_pos=cache_pos)
+    if cfg.parallel_block:
+        mlp_out = swiglu(h, **{k: lp["mlp"][k] for k in ("wg", "wu", "wd")})
+        return x + attn_out + mlp_out, new_cache
+    x = x + attn_out
+    h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    x = x + swiglu(h2, lp["mlp"]["wg"], lp["mlp"]["wu"], lp["mlp"]["wd"])
+    return x, new_cache
+
+
+def _moe_block(cfg, lp, x, positions, mesh_ctx, cache=None, cache_pos=None):
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.kv_lora_rank:
+        attn_out, new_cache = mla_attention(cfg, lp["attn"], h, positions,
+                                            cache=cache, cache_pos=cache_pos)
+    else:
+        attn_out, new_cache = gqa_attention(cfg, lp["attn"], h, positions,
+                                            cache=cache, cache_pos=cache_pos)
+    x = x + attn_out
+    h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    x = x + moe_lib.moe_apply(cfg, lp["moe"], h2, mesh_ctx)
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------
+# forward passes
+# --------------------------------------------------------------------------
+
+def _embed(cfg, params, tokens, extras):
+    x = params["embed"][tokens].astype(cfg.jdtype)
+    if cfg.frontend == "patch" and extras is not None \
+            and "patch_embeds" in extras and tokens.shape[1] > 1:
+        fl = cfg.frontend_len
+        x = x.at[:, :fl].set(extras["patch_embeds"].astype(x.dtype))
+    return x
+
+
+def forward_train(cfg: ModelConfig, params: Dict, batch: Dict,
+                  mesh_ctx: Optional[MeshContext] = None) -> jax.Array:
+    """Next-token cross-entropy loss (fp32 accumulation)."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    if cfg.family == "audio":
+        logits = _whisper_logits(cfg, params, batch)
+    else:
+        x = _embed(cfg, params, tokens, batch)
+        x = _backbone(cfg, params, x, positions, mesh_ctx)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["unembed"].astype(x.dtype))
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def _backbone(cfg, params, x, positions, mesh_ctx, caches=None,
+              cache_pos=None):
+    """Returns hidden states (and new caches when decoding)."""
+    fam = cfg.family
+    new_caches = None
+    if fam in ("dense", "vlm"):
+        fn = lambda lp, h, c: _dense_block(cfg, lp, h, positions, c,
+                                           cache_pos)
+        x, new_caches = _scan_with_caches(fn, params["blocks"], x, caches,
+                                          unroll=cfg.scan_unroll,
+                                     policy=_remat_policy(cfg.remat_policy))
+    elif fam == "moe":
+        pat = layer_pattern(cfg)
+        x, new_caches = _moe_backbone(cfg, params, x, positions, mesh_ctx,
+                                      pat, caches, cache_pos)
+    elif fam == "ssm":
+        fn = lambda lp, h, c: _mamba_layer(cfg, lp, h, c)
+        x, new_caches = _scan_with_caches(fn, params["blocks"], x, caches,
+                                          unroll=cfg.scan_unroll,
+                                     policy=_remat_policy(cfg.remat_policy))
+    elif fam == "hybrid":
+        x, new_caches = _zamba_backbone(cfg, params, x, positions, caches,
+                                        cache_pos)
+    else:
+        raise ValueError(fam)
+    if caches is None:
+        return x
+    return x, new_caches
+
+
+def _remat_policy(name: str):
+    if name == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return None
+
+
+def _scan_with_caches(fn, stack, x, caches, unroll: bool = False,
+                      policy=None):
+    def body(carry, inp):
+        lp, cache = inp
+        y, nc = fn(lp, carry, cache)
+        return y, nc
+
+    body = jax.checkpoint(body, policy=policy)
+    if caches is None:
+        def body_nc(carry, lp):
+            y, _ = fn(lp, carry, None)
+            return y, None
+        x, _ = lax.scan(jax.checkpoint(body_nc, policy=policy), x, stack,
+                        unroll=unroll)
+        return x, None
+    x, ncaches = lax.scan(body, x, (stack, caches), unroll=unroll)
+    return x, ncaches
+
+
+def _mamba_layer(cfg, lp, x, state):
+    h = rmsnorm(x, lp["ln"], cfg.norm_eps)
+    out, new_state = mamba2_block(cfg, lp["mixer"], h, state)
+    return x + out, new_state
+
+
+def _zamba_backbone(cfg, params, x, positions, caches, cache_pos):
+    """Mamba2 stack with a shared attention block every k layers.
+
+    Python-level loop (38 layers): the shared block's weights are reused
+    at every site but each site has its own KV cache.
+    """
+    every = cfg.shared_attn_every
+    L = cfg.num_layers
+    stack = params["blocks"]
+    sp = params["shared_attn"]
+    site = 0
+    new_states = []
+    new_kv = []
+    for i in range(L):
+        lp = jax.tree.map(lambda a: a[i], stack)
+        st = None if caches is None else \
+            jax.tree.map(lambda a: a[i], caches["ssm"])
+        x, ns = _mamba_layer(cfg, lp, x, st)
+        if ns is not None:
+            new_states.append(ns)
+        if every and (i % every == every - 1):
+            kv = None if caches is None else \
+                jax.tree.map(lambda a: a[site], caches["attn"])
+            h = rmsnorm(x, sp["ln1"], cfg.norm_eps)
+            att, nkv = gqa_attention(cfg, sp["attn"], h, positions,
+                                     cache=kv, cache_pos=cache_pos)
+            x = x + att
+            h2 = rmsnorm(x, sp["ln2"], cfg.norm_eps)
+            x = x + swiglu(h2, sp["mlp"]["wg"], sp["mlp"]["wu"],
+                           sp["mlp"]["wd"])
+            if nkv is not None:
+                new_kv.append(nkv)
+            site += 1
+    if caches is None:
+        return x, None
+    stacked = {
+        "ssm": jax.tree.map(lambda *a: jnp.stack(a), *new_states),
+        "attn": jax.tree.map(lambda *a: jnp.stack(a), *new_kv),
+    }
+    return x, stacked
+
+
+def _moe_backbone(cfg, params, x, positions, mesh_ctx, pat, caches,
+                  cache_pos):
+    """Dense/MoE interleave: scan homogeneous runs, unroll transitions."""
+    runs = []  # (kind, start, length)
+    i = 0
+    while i < len(pat):
+        j = i
+        while j < len(pat) and pat[j] == pat[i]:
+            j += 1
+        runs.append((pat[i], i, j - i))
+        i = j
+    # alternating patterns (llama4) produce L runs of length 1; pair them
+    if len(runs) > 4 and all(r[2] == 1 for r in runs):
+        return _moe_paired(cfg, params, x, positions, mesh_ctx, pat,
+                           caches, cache_pos)
+    di = mi = 0
+    new_dense_c, new_moe_c = [], []
+    out_caches = {} if caches is not None else None
+    for kind, start, length in runs:
+        if kind == "dense":
+            stack = jax.tree.map(lambda a: a[di:di + length],
+                                 params["dense_blocks"])
+            sub = None if caches is None else \
+                jax.tree.map(lambda a: a[di:di + length], caches["dense"])
+            fn = lambda lp, h, c: _dense_block(cfg, lp, h, positions, c,
+                                               cache_pos)
+            x, nc = _scan_with_caches(fn, stack, x, sub,
+                                       unroll=cfg.scan_unroll,
+                                     policy=_remat_policy(cfg.remat_policy))
+            if nc is not None:
+                new_dense_c.append(nc)
+            di += length
+        else:
+            stack = jax.tree.map(lambda a: a[mi:mi + length],
+                                 params["moe_blocks"])
+            sub = None if caches is None else \
+                jax.tree.map(lambda a: a[mi:mi + length], caches["moe"])
+            fn = lambda lp, h, c: _moe_block(cfg, lp, h, positions,
+                                             mesh_ctx, c, cache_pos)
+            x, nc = _scan_with_caches(fn, stack, x, sub,
+                                       unroll=cfg.scan_unroll,
+                                     policy=_remat_policy(cfg.remat_policy))
+            if nc is not None:
+                new_moe_c.append(nc)
+            mi += length
+    if caches is None:
+        return x, None
+    cat = lambda parts: jax.tree.map(
+        lambda *a: jnp.concatenate(a, axis=0), *parts) if parts else None
+    out_caches = {"dense": cat(new_dense_c), "moe": cat(new_moe_c)}
+    out_caches = {k: v for k, v in out_caches.items() if v is not None}
+    return x, out_caches
+
+
+def _moe_paired(cfg, params, x, positions, mesh_ctx, pat, caches,
+                cache_pos):
+    """(dense, moe) repeating unit scanned as pairs (llama4 interleave)."""
+    nd = sum(1 for k in pat if k == "dense")
+    pairs = nd
+
+    def pair_fn(lp, h, c):
+        dc = None if c is None else c["dense"]
+        mc = None if c is None else c["moe"]
+        h, ndc = _dense_block(cfg, lp["dense"], h, positions, dc, cache_pos)
+        h, nmc = _moe_block(cfg, lp["moe"], h, positions, mesh_ctx, mc,
+                            cache_pos)
+        if c is None:
+            return h, None
+        return h, {"dense": ndc, "moe": nmc}
+
+    stack = {"dense": params["dense_blocks"], "moe": params["moe_blocks"]}
+    sub = None if caches is None else caches
+    x, nc = _scan_with_caches(pair_fn, stack, x, sub,
+                              unroll=cfg.scan_unroll,
+                                     policy=_remat_policy(cfg.remat_policy))
+    return x, nc
+
+
+def _whisper_logits(cfg, params, batch):
+    frames = batch["frames"].astype(cfg.jdtype)   # [B, Tf, D] stub
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    Tf = frames.shape[1]
+    enc = frames + params["enc_pos"][None, :Tf].astype(frames.dtype)
+    enc_pos = jnp.arange(Tf, dtype=jnp.int32)[None]
+
+    def enc_fn(lp, h, _):
+        hn = layernorm(h, lp["ln1"], jnp.zeros_like(lp["ln1"]), cfg.norm_eps)
+        att, _ = gqa_attention(cfg, lp["attn"], hn, enc_pos, causal=False,
+                               use_rope=False)
+        h = h + att
+        hn = layernorm(h, lp["ln2"], jnp.zeros_like(lp["ln2"]), cfg.norm_eps)
+        h = h + gelu_mlp(hn, lp["mlp"]["wi"], lp["mlp"]["bi"],
+                         lp["mlp"]["wo"], lp["mlp"]["bo"])
+        return h, None
+
+    enc, _ = _scan_with_caches(enc_fn, params["enc_blocks"], enc, None,
+                               unroll=cfg.scan_unroll,
+                                     policy=_remat_policy(cfg.remat_policy))
+    enc = layernorm(enc, params["enc_final_norm"],
+                    jnp.zeros_like(params["enc_final_norm"]), cfg.norm_eps)
+
+    x = params["embed"][tokens].astype(cfg.jdtype)
+    x = x + params["dec_pos"][None, :S].astype(x.dtype)
+    dpos = jnp.arange(S, dtype=jnp.int32)[None]
+
+    def dec_fn(lp, h, _):
+        hn = layernorm(h, lp["ln1"], jnp.zeros_like(lp["ln1"]), cfg.norm_eps)
+        att, _ = gqa_attention(cfg, lp["attn"], hn, dpos, causal=True,
+                               use_rope=False)
+        h = h + att
+        hn = layernorm(h, lp["ln_x"], jnp.zeros_like(lp["ln_x"]),
+                       cfg.norm_eps)
+        xatt, _ = gqa_attention(cfg, lp["xattn"], hn, dpos, kv_source=enc,
+                                use_rope=False)
+        h = h + xatt
+        hn = layernorm(h, lp["ln2"], jnp.zeros_like(lp["ln2"]), cfg.norm_eps)
+        h = h + gelu_mlp(hn, lp["mlp"]["wi"], lp["mlp"]["bi"],
+                         lp["mlp"]["wo"], lp["mlp"]["bo"])
+        return h, None
+
+    x, _ = _scan_with_caches(dec_fn, params["dec_blocks"], x, None,
+                             unroll=cfg.scan_unroll,
+                                     policy=_remat_policy(cfg.remat_policy))
+    x = layernorm(x, params["final_norm"],
+                  jnp.zeros_like(params["final_norm"]), cfg.norm_eps)
+    return jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+
+
+# --------------------------------------------------------------------------
+# serving: cache init, prefill, decode
+# --------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, B: int, T: int) -> Any:
+    dt = cfg.jdtype
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    L = cfg.num_layers
+
+    def kv(n):
+        if cfg.kv_cache_dtype == "int8":
+            return QuantKVCache(
+                jnp.zeros((n, B, T, KV, hd), jnp.int8),
+                jnp.zeros((n, B, T, KV), jnp.float32),
+                jnp.zeros((n, B, T, KV, hd), jnp.int8),
+                jnp.zeros((n, B, T, KV), jnp.float32))
+        return KVCache(jnp.zeros((n, B, T, KV, hd), dt),
+                       jnp.zeros((n, B, T, KV, hd), dt))
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return kv(L)
+    if fam == "moe":
+        pat = layer_pattern(cfg)
+        nd = sum(1 for k in pat if k == "dense")
+        nm = L - nd
+        if cfg.kv_lora_rank:
+            mk = lambda n: MLACache(jnp.zeros(
+                (n, B, T, cfg.kv_lora_rank + cfg.rope_head_dim), dt))
+        else:
+            mk = kv
+        out = {"moe": mk(nm)}
+        if nd:
+            out["dense"] = mk(nd)
+        return out
+    if fam == "ssm":
+        Hh, Pd, N = ssm_dims(cfg)
+        conv_ch = Hh * Pd + 2 * N
+        return SSMState(jnp.zeros((L, B, Hh, Pd, N), dt),
+                        jnp.zeros((L, B, cfg.conv_width - 1, conv_ch), dt))
+    if fam == "hybrid":
+        Hh, Pd, N = ssm_dims(cfg)
+        conv_ch = Hh * Pd + 2 * N
+        sites = sum(1 for i in range(L)
+                    if cfg.shared_attn_every
+                    and i % cfg.shared_attn_every == cfg.shared_attn_every - 1)
+        return {
+            "ssm": SSMState(jnp.zeros((L, B, Hh, Pd, N), dt),
+                            jnp.zeros((L, B, cfg.conv_width - 1, conv_ch),
+                                      dt)),
+            "attn": kv(max(sites, 1)),
+        }
+    if fam == "audio":
+        return {"self": kv(L),
+                "enc": jnp.zeros((B, cfg.frontend_len, cfg.d_model), dt)}
+    raise ValueError(fam)
+
+
+def forward_decode(cfg: ModelConfig, params: Dict, caches: Any,
+                   tokens: jax.Array, pos: jax.Array,
+                   mesh_ctx: Optional[MeshContext] = None
+                   ) -> Tuple[jax.Array, Any]:
+    """One decode step. tokens [B] int32, pos [B] int32 (write position)."""
+    B = tokens.shape[0]
+    x = params["embed"][tokens][:, None].astype(cfg.jdtype)  # [B,1,D]
+    positions = pos[:, None]
+
+    if cfg.family == "audio":
+        enc = caches["enc"]
+        dpos = positions
+
+        def dec_fn(lp, h, c):
+            hn = layernorm(h, lp["ln1"], jnp.zeros_like(lp["ln1"]),
+                           cfg.norm_eps)
+            att, nc = gqa_attention(cfg, lp["attn"], hn, dpos, cache=c,
+                                    cache_pos=pos, use_rope=False)
+            h = h + att
+            hn = layernorm(h, lp["ln_x"], jnp.zeros_like(lp["ln_x"]),
+                           cfg.norm_eps)
+            xatt, _ = gqa_attention(cfg, lp["xattn"], hn, dpos,
+                                    kv_source=enc, use_rope=False)
+            h = h + xatt
+            hn = layernorm(h, lp["ln2"], jnp.zeros_like(lp["ln2"]),
+                           cfg.norm_eps)
+            h = h + gelu_mlp(hn, lp["mlp"]["wi"], lp["mlp"]["bi"],
+                             lp["mlp"]["wo"], lp["mlp"]["bo"])
+            return h, nc
+
+        x = x + params["dec_pos"][pos][:, None].astype(x.dtype)
+        x, nkv = _scan_with_caches(dec_fn, params["dec_blocks"], x,
+                                   caches["self"],
+                                   unroll=cfg.scan_unroll,
+                                     policy=_remat_policy(cfg.remat_policy))
+        x = layernorm(x, params["final_norm"],
+                      jnp.zeros_like(params["final_norm"]), cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["unembed"].astype(x.dtype))[:, 0]
+        return logits, {"self": nkv, "enc": enc}
+
+    x, new_caches = _backbone(cfg, params, x, positions, mesh_ctx,
+                              caches=caches, cache_pos=pos)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["unembed"].astype(x.dtype))[:, 0]
+    return logits, new_caches
+
+
+def forward_prefill(cfg: ModelConfig, params: Dict, batch: Dict,
+                    mesh_ctx: Optional[MeshContext] = None) -> jax.Array:
+    """Prefill: full forward, last-position logits (cache-build regime)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    if cfg.family == "audio":
+        logits = _whisper_logits(cfg, params, batch)
+        return logits[:, -1]
+    x = _embed(cfg, params, tokens, batch)
+    x = _backbone(cfg, params, x, positions, mesh_ctx)
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return jnp.einsum("bsd,dv->bsv", x,
+                      params["unembed"].astype(x.dtype))[:, 0]

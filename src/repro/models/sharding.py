@@ -1,0 +1,137 @@
+"""Parameter / activation partition rules for the production mesh.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model")
+multi-pod.  Megatron-style tensor parallelism over "model"; DP over
+("pod", "data"); MoE experts sharded over "model" with the hidden dim of
+expert weights additionally sharded over "data" (weight-gathered /
+FSDP-style storage — the all-gather is re-materialised per layer, which
+is what makes the 236B/400B MoE param + optimizer state fit per chip).
+
+Rules are by parameter path leaf name — the whole tree is mapped in one
+pass, with the layer-stack leading dim always unsharded.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# leaf-name -> spec builder; `st` is True when the leaf has a leading
+# layer-stack dim (prepend None)
+_RULES: Dict[str, Tuple] = {
+    # attention (column-parallel QKV, row-parallel out)
+    "wq": (None, "model", None),
+    "wk": (None, "model", None),
+    "wv": (None, "model", None),
+    "wo": ("model", None, None),
+    "bq": ("model", None),
+    "bk": ("model", None),
+    "bv": ("model", None),
+    # MLA
+    "wq_a": (None, "model"),
+    "wq_b": (None, "model", None),
+    "wkv_a": (None, None),
+    "wkv_b": (None, "model", None),
+    "q_norm": (None,),
+    "kv_norm": (None,),
+    # dense mlp
+    "wg": (None, "model"),
+    "wu": (None, "model"),
+    "wd": ("model", None),
+    "wi": (None, "model"),
+    "bi": ("model",),
+    # mamba
+    "in_proj": (None, "model"),
+    "out_proj": ("model", None),
+    "conv_w": (None, "model"),
+    "A_log": ("model",),
+    "D": ("model",),
+    "dt_bias": ("model",),
+    "norm": ("model",),
+    # embeddings
+    "embed": ("model", None),
+    "unembed": (None, "model"),
+    "enc_pos": (None, None),
+    "dec_pos": (None, None),
+}
+
+# expert-weight overrides (leaf names inside a "moe" subtree): E over
+# "model", hidden dim over "data" (gathered at use — ZeRO-3 for experts)
+_MOE_RULES: Dict[str, Tuple] = {
+    "router": (None, None),
+    "wg": ("model", None, "data"),
+    "wu": ("model", None, "data"),
+    "wd": ("model", "data", None),
+    "shared_wg": (None, "model"),
+    "shared_wu": (None, "model"),
+    "shared_wd": ("model", None),
+}
+
+
+def _spec_for(path, leaf) -> P:
+    names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+    leaf_name = names[-1]
+    in_moe = any(n == "moe" for n in names[:-1])
+    rules = _MOE_RULES if (in_moe and leaf_name in _MOE_RULES) else _RULES
+    rule = rules.get(leaf_name)
+    ndim = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
+    if rule is None:
+        return P()  # norms, scalars: replicated
+    rule = tuple(rule)
+    if len(rule) < ndim:  # leading layer-stack dim(s): unsharded
+        rule = (None,) * (ndim - len(rule)) + rule
+    elif len(rule) > ndim:
+        rule = rule[-ndim:] if ndim else ()
+    # drop axes that would not divide evenly — checked at placement time
+    return P(*rule)
+
+
+def param_specs(params: Any) -> Any:
+    """PartitionSpec tree parallel to the parameter tree."""
+    return jax.tree_util.tree_map_with_path(_spec_for, params)
+
+
+def _valid(spec: P, shape, mesh: Mesh) -> P:
+    """Clear axes that do not divide the corresponding dim."""
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if ax is None:
+            out.append(None)
+            continue
+        size = mesh.shape[ax] if isinstance(ax, str) else 1
+        out.append(ax if dim % size == 0 and dim >= size else None)
+    return P(*out)
+
+
+def valid_param_specs(params: Any, mesh: Mesh) -> Any:
+    """Partition specs with non-dividing axes cleared for this mesh."""
+    specs = param_specs(params)
+    return jax.tree.map(
+        lambda leaf, spec: _valid(spec, leaf.shape, mesh), params, specs)
+
+
+def param_shardings(params: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                        valid_param_specs(params, mesh))
+
+
+def batch_spec(mesh: Mesh) -> P:
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(dp)
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def cache_spec(mesh: Mesh) -> P:
+    """KV caches: batch over DP axes, heads over model."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(None, dp, None, "model", None)
+
+
+def activation_spec(mesh: Mesh) -> P:
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(dp, None, None)

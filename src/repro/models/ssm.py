@@ -1,0 +1,135 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Chunked SSD algorithm: the sequence is split into chunks of length Q;
+within a chunk the recurrence is materialised as a decay-masked
+attention-like quadratic form (MXU-friendly), and chunk-level states are
+propagated with a short ``lax.scan`` — O(S*Q) work, O(S/Q) sequential
+steps.  This is the TPU-native adaptation: no per-token scan, all heavy
+ops are batched einsums.
+
+Decode keeps O(1) state per layer: the SSM state [H, P, N] plus the
+causal-conv tail — which is what makes the ``long_500k`` cell feasible
+for the SSM/hybrid architectures (DESIGN.md shape-cell table).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+class SSMState(NamedTuple):
+    h: jax.Array        # [B, H, P, N] ssm state
+    conv: jax.Array     # [B, W-1, conv_channels] causal-conv tail
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    H = cfg.num_heads
+    Pd = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    return H, Pd, N
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, tail: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. x [B,S,C], w [W,C]. Returns (y, new_tail)."""
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu(y), xp[:, -(W - 1):]
+
+
+def ssd_chunked(xh: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                h0: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    xh [B,S,H,P], dt [B,S,H] (softplus'd), A [H] (negative), Bm/Cm [B,S,N].
+    Returns (y [B,S,H,P], h_final [B,H,P,N]).
+    """
+    B, S, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+
+    def r(t):  # reshape into chunks
+        return t.reshape((B, nc, Q) + t.shape[2:])
+
+    xc, dtc, Bc, Cc = r(xh), r(dt.astype(jnp.float32)), r(Bm), r(Cm)
+    # per-step log decay: l = A * dt  (A < 0)
+    lc = A.astype(jnp.float32)[None, None, None, :] * dtc  # [B,nc,Q,H]
+    cum = jnp.cumsum(lc, axis=2)                            # [B,nc,Q,H]
+    # intra-chunk decay matrix M[t,s] = exp(cum_t - cum_s), s <= t
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # [B,nc,t,s,H]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    # intra-chunk (attention-like) term
+    scores = jnp.einsum("bctn,bcsn->bcts", Cc, Bc).astype(jnp.float32)
+    dx = xc.astype(jnp.float32) * dtc[..., None]            # [B,nc,Q,H,P]
+    y_intra = jnp.einsum("bcts,bctsh,bcshp->bcthp", scores, M, dx)
+
+    # chunk summary states and cross-chunk scan
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)            # [B,nc,Q,H]
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn", Bc, decay_end, dx)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                 # [B,nc,H]
+
+    h_init = (jnp.zeros((B, H, Pd, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def step(h, inp):
+        st, dec = inp  # [B,H,P,N], [B,H]
+        h_out = h  # state entering this chunk
+        h_next = h * dec[..., None, None] + st
+        return h_next, h_out
+
+    (h_final, h_enter) = jax.lax.scan(
+        step, h_init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_enter = h_enter.transpose(1, 0, 2, 3, 4)              # [B,nc,H,P,N]
+    # contribution of the entering state to each position
+    y_init = jnp.einsum("bctn,bcth,bchpn->bcthp", Cc, jnp.exp(cum), h_enter)
+    y = (y_intra + y_init).reshape(B, Sp, H, Pd)[:, :S]
+    return y.astype(xh.dtype), h_final.astype(xh.dtype)
+
+
+def mamba2_block(cfg: ModelConfig, p: dict, x: jax.Array,
+                 state: Optional[SSMState] = None
+                 ) -> Tuple[jax.Array, Optional[SSMState]]:
+    """Full Mamba2 mixer. x [B,S,D]. state!=None -> streaming/decode mode."""
+    B, S, D = x.shape
+    H, Pd, N = ssm_dims(cfg)
+    inner = H * Pd
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xr, Bm, Cm, dt = jnp.split(
+        proj, [inner, 2 * inner, 2 * inner + N, 2 * inner + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xr, Bm, Cm], axis=-1)
+    tail = state.conv if state is not None else None
+    conv_out, new_tail = _causal_conv(conv_in, p["conv_w"], tail)
+    xr, Bm, Cm = jnp.split(conv_out, [inner, inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xr.reshape(B, S, H, Pd)
+    h0 = state.h if state is not None else None
+    y, h = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk, h0)
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, inner)
+    # gated RMSNorm then out projection
+    from repro.models.layers import rmsnorm
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    new_state = SSMState(h, new_tail) if state is not None else None
+    return out, new_state

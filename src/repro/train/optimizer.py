@@ -1,0 +1,116 @@
+"""AdamW with mesh-aware (ZeRO-1 style) optimizer-state sharding.
+
+Moments are stored fp32 and sharded like their parameters, with the first
+still-unsharded dimension additionally sharded over the DP axes — the
+optimizer-state memory then scales 1/(TP * DP) like ZeRO-1, at the cost of
+one all-gather per step that XLA overlaps with the optimizer math.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init_state(params: Any) -> AdamWState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(jnp.zeros((), jnp.int32),
+                      jax.tree.map(f32, params),
+                      jax.tree.map(f32, params))
+
+
+def apply_update(cfg: AdamWConfig, params: Any, grads: Any,
+                 state: AdamWState) -> Tuple[Any, AdamWState]:
+    # global-norm clip (fp32)
+    gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu / b1c
+        nhat = nu / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step, new_mu, new_nu)
+
+
+def zero1_specs(param_specs: Any, params: Any, mesh: Mesh) -> Any:
+    """Moment specs: parameter spec + DP sharding on the first free dim."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    def one(spec: P, leaf) -> P:
+        if not dp or leaf.ndim == 0:
+            return spec
+        entries = list(tuple(spec) + (None,) * (leaf.ndim - len(spec)))
+        used = set()
+        for e in entries:
+            for a in (e if isinstance(e, tuple) else (e,)):
+                used.add(a)
+        if any(a in used for a in dp):
+            return spec  # a DP axis already shards this leaf
+        for i, e in enumerate(entries):
+            if e is None and leaf.shape[i] % dp_size == 0 \
+                    and leaf.shape[i] >= dp_size:
+                entries[i] = dp if len(dp) > 1 else dp[0]
+                break
+        return P(*entries)
+
+    return jax.tree.map(one, param_specs, params)
+
+
+def state_shardings(param_specs: Any, params: Any, mesh: Mesh
+                    ) -> AdamWState:
+    mspecs = zero1_specs(param_specs, params, mesh)
+    sh = jax.tree.map(lambda s: NamedSharding(mesh, s), mspecs)
+    return AdamWState(NamedSharding(mesh, P()), sh, sh)

@@ -1,0 +1,45 @@
+"""Run JAX code under N virtual CPU devices in a subprocess.
+
+JAX locks the device count at first backend init, and the spec forbids
+forcing a global device count on the main test process (smoke tests must
+see 1 device).  Multi-device tests therefore execute in a child process
+with XLA_FLAGS set before the jax import.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "..", "src")
+
+
+def run_multidevice(body: str, ndev: int = 8, timeout: int = 600) -> str:
+    """Execute ``body`` (python source) with ``ndev`` virtual devices.
+
+    The body runs after ``import jax`` etc.; raise / assert inside it to
+    fail.  Returns captured stdout.  The script must print OK as its last
+    action for the caller to assert on.
+    """
+    prelude = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count={ndev} "
+            + os.environ.get("XLA_FLAGS", ""))
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        assert jax.device_count() == {ndev}, jax.device_count()
+    """)
+    script = prelude + textwrap.dedent(body)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(SRC) + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\n--- stdout ---\n"
+            f"{proc.stdout}\n--- stderr ---\n{proc.stderr[-4000:]}")
+    return proc.stdout

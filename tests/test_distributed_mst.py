@@ -1,0 +1,95 @@
+"""Distributed MSF vs Kruskal oracle on 8 virtual devices (subprocess)."""
+import pytest
+
+from tests.helpers.subproc import run_multidevice
+
+BODY = """
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.core.distributed import build_dist_graph, distributed_msf
+from repro.core import oracle
+from repro.data import generators
+
+mesh1d = Mesh(np.array(jax.devices()), ("data",))
+mesh2d = Mesh(np.array(jax.devices()).reshape(4, 2), ("row", "col"))
+
+cases = []
+for fam, n in [("gnm", 512), ("grid2d", 1024), ("rmat", 512), ("rgg2d", 800)]:
+    u, v, w, nn = generators.generate(fam, n, avg_degree=8.0, seed=3)
+    cases.append((fam, u, v, w, nn))
+# adversarial: heavy ties
+rng = np.random.default_rng(0)
+u = rng.integers(0, 300, 2000).astype(np.int32)
+v = rng.integers(0, 300, 2000).astype(np.int32)
+keep = u != v
+w = rng.integers(1, 6, keep.sum()).astype(np.float32)
+cases.append(("ties", u[keep], v[keep], w, 300))
+
+for mesh, axes, nsh in [(mesh1d, ("data",), 8), (mesh2d, ("row", "col"), 8)]:
+    for fam, u, v, w, n in cases:
+        g, cap = build_dist_graph(u, v, w, n, nsh)
+        _, expect = oracle.kruskal(u, v, w, n)
+        ncomp = len(np.unique(oracle.component_labels(u, v, n)))
+        for algo in ("boruvka", "filter_boruvka"):
+            for pre in (True, False):
+                with mesh:
+                    mask, wt, cnt, labels = distributed_msf(
+                        g, n, mesh, algorithm=algo, axis_names=axes,
+                        local_preprocessing=pre)
+                assert abs(float(wt) - expect) < 1e-3 * max(1.0, expect), (
+                    fam, algo, pre, axes, float(wt), expect)
+                assert int(cnt) == n - ncomp, (fam, algo, pre, int(cnt),
+                                               n - ncomp)
+                # the marked edges must form a forest
+                mk = np.asarray(mask)
+                gu = np.asarray(g.u)[mk]
+                gv = np.asarray(g.v)[mk]
+                assert oracle.is_forest(gu, gv, n), (fam, algo, pre)
+                # labels are consistent component representatives
+                lab = np.asarray(labels)
+                ref = oracle.component_labels(u, v, n)
+                groups = {}
+                for vert in range(n):
+                    groups.setdefault(ref[vert], set()).add(lab[vert])
+                for k, s in groups.items():
+                    assert len(s) == 1, (fam, algo, "labels split a component")
+print("OK")
+"""
+
+PREPROCESSING_EFFECT = """
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+from repro.core.distributed import (build_dist_graph, _local_preprocessing)
+from repro.data import generators
+import jax.numpy as jnp
+
+mesh = Mesh(np.array(jax.devices()), ("data",))
+u, v, w, n = generators.generate("grid2d", 4096, seed=5)
+g, cap = build_dist_graph(u, v, w, n, 8)
+
+def body(uu, vv, ww, ee):
+    valid = jnp.isfinite(ww)
+    labels, mst = _local_preprocessing(uu, vv, ww, ee, valid, n, ("data",))
+    return jax.lax.psum(mst.sum(), ("data",)), labels
+
+f = shard_map(body, mesh=mesh, in_specs=(P("data"),) * 4,
+              out_specs=(P(), P()))
+contracted, labels = f(g.u, g.v, g.w, g.eid)
+# a 64x64 grid split into 8 shards has mostly-local edges: the comm-free
+# phase must contract the bulk of the tree (paper: up to 5x fewer rounds)
+assert int(contracted) > n // 2, int(contracted)
+# local preprocessing must only produce valid MST edges: weight of final
+# MSF must match when continuing (covered by BODY test); here check the
+# contraction count is sane (< n)
+assert int(contracted) < n, int(contracted)
+print("OK")
+"""
+
+
+def test_distributed_msf_correctness():
+    out = run_multidevice(BODY, ndev=8, timeout=900)
+    assert "OK" in out
+
+
+def test_local_preprocessing_contracts_local_graphs():
+    out = run_multidevice(PREPROCESSING_EFFECT, ndev=8)
+    assert "OK" in out

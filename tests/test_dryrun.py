@@ -1,0 +1,88 @@
+"""Dry-run machinery: production mesh shapes, one real 512-device cell
+compile (subprocess), HLO collective parser unit behaviour."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch.roofline import (RooflineTerms, collective_bytes_from_hlo,
+                                   model_flops)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_roofline_terms_math():
+    t = RooflineTerms(flops=197e12, bytes_accessed=819e9,
+                      collective_bytes=50e9, chips=256)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(1.0)
+    assert t.collective_s == pytest.approx(1.0)
+    t2 = RooflineTerms(flops=1e12, bytes_accessed=819e9,
+                       collective_bytes=0, chips=256)
+    assert t2.dominant == "memory"
+    assert t2.compute_fraction < 0.01
+
+
+def test_collective_parser_weights_while_loops():
+    hlo = """
+HloModule test
+
+%cond (p: (s32[], f32[8])) -> pred[] {
+  %p = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p = (s32[], f32[8]) parameter(0)
+  %x = f32[8] get-tuple-element(%p), index=1
+  %ar = f32[8]{0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%sum
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[8]) tuple(%i, %ar)
+}
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %a = f32[8] parameter(0)
+  %ag = f32[32]{0} all-gather(%a), replica_groups={{0,1,2,3}}, dimensions={0}
+  %t0 = (s32[], f32[8]) tuple(%zero, %a)
+  %w = (s32[], f32[8]) while(%t0), condition=%cond, body=%body
+  ROOT %r = f32[8] get-tuple-element(%w), index=1
+}
+"""
+    res = collective_bytes_from_hlo(hlo)
+    # all-reduce: 8 floats * 4B = 32B, x5 trips = 160
+    assert res["all-reduce_bytes"] == pytest.approx(160.0)
+    assert res["all-reduce_count"] == pytest.approx(5.0)
+    # all-gather result 32 floats = 128B; operand = 128/4 = 32
+    assert res["all-gather_bytes"] == pytest.approx(32.0)
+
+
+def test_model_flops_sanity():
+    from repro.configs.base import get_arch
+    cfg = get_arch("llama3.2-3b").config
+    info = {"kind": "train", "seq": 4096, "batch": 256}
+    mf = model_flops(cfg, info, backward=True)
+    # 6 * 3.6e9 * 1.05e6 tokens ~ 2.3e16, plus attention
+    assert 2.0e16 < mf < 4.5e16, mf
+
+
+@pytest.mark.slow
+def test_one_cell_compiles_on_512_devices():
+    """The real thing, scoped to one fast cell (mamba2 decode)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(SRC) + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    out = "/tmp/dryrun_pytest.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "mamba2-130m", "--shape", "decode_32k", "--mesh", "multi",
+         "--no-probes", "--out", out],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr[-2000:]
+    rec = json.load(open(out))[0]
+    assert rec["status"] == "ok", rec
+    assert rec["roofline"]["flops"] > 0

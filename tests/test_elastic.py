@@ -1,0 +1,45 @@
+"""Elastic restart: a checkpoint written under one device topology is
+restored, resharded, onto a different mesh (the node-failure /
+shrink-the-job recovery path from DESIGN.md §5)."""
+import os
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.models.model import init_params
+from repro.train import checkpoint as ckpt
+from tests.helpers.subproc import run_multidevice
+
+
+def test_restore_onto_bigger_mesh(tmp_path):
+    # save on the single-device main process
+    cfg = get_arch("llama3.2-3b").smoke
+    params = init_params(cfg, jax.random.key(0))
+    ckpt.save(str(tmp_path), 7, {"params": params})
+    ref = float(np.sum(np.asarray(jax.tree.leaves(params)[0],
+                                  np.float32)))
+
+    body = f"""
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.configs.base import get_arch
+from repro.models.model import init_params
+from repro.models.sharding import param_shardings
+from repro.train import checkpoint as ckpt
+
+cfg = get_arch("llama3.2-3b").smoke
+like = {{"params": jax.eval_shape(lambda: init_params(cfg,
+                                                      jax.random.key(0)))}}
+mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+sh = {{"params": param_shardings(like["params"], mesh)}}
+assert ckpt.latest_step({str(tmp_path)!r}) == 7
+tree = ckpt.restore({str(tmp_path)!r}, 7, like, shardings=sh, verify=True)
+leaf = jax.tree.leaves(tree["params"])[0]
+# placed on the 8-device mesh with the rule-derived sharding
+assert len(leaf.sharding.device_set) in (1, 2, 4, 8), leaf.sharding
+total = float(jnp.sum(leaf.astype(jnp.float32)))
+assert abs(total - {ref!r}) < 1e-2 * max(abs({ref!r}), 1.0), total
+print("OK")
+"""
+    out = run_multidevice(body, ndev=8)
+    assert "OK" in out

@@ -1,0 +1,166 @@
+"""Per-architecture smoke tests: reduced config, one train-forward + one
+decode step on CPU; asserts output shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_arch
+from repro.models.model import (forward_decode, forward_prefill,
+                                forward_train, init_caches, init_params)
+
+
+def _batch(cfg, B=2, S=16):
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                              jnp.int32),
+    }
+    if cfg.frontend == "patch":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.frontend_len, cfg.d_model)),
+            jnp.bfloat16)
+    if cfg.frontend == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.frontend_len, cfg.d_model)),
+            jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_forward(arch):
+    cfg = get_arch(arch).smoke
+    params = init_params(cfg, jax.random.key(0))
+    batch = _batch(cfg)
+    loss = jax.jit(lambda p, b: forward_train(cfg, p, b))(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), (arch, float(loss))
+    # a gradient step must also be finite (exercises bwd of every layer)
+    g = jax.jit(jax.grad(lambda p, b: forward_train(cfg, p, b)))(params,
+                                                                 batch)
+    gn = sum(float(jnp.sum(jnp.square(x.astype(jnp.float32))))
+             for x in jax.tree.leaves(g))
+    assert np.isfinite(gn), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_step(arch):
+    cfg = get_arch(arch).smoke
+    params = init_params(cfg, jax.random.key(1))
+    B, T = 2, 32
+    caches = init_caches(cfg, B, T)
+    if cfg.family == "audio":
+        rng = np.random.default_rng(1)
+        caches["enc"] = jnp.asarray(
+            rng.normal(size=(B, cfg.frontend_len, cfg.d_model)),
+            jnp.bfloat16)
+    tokens = jnp.asarray([1, 2], jnp.int32)
+    pos = jnp.asarray([0, 0], jnp.int32)
+    step = jax.jit(lambda p, c, t, q: forward_decode(cfg, p, c, t, q))
+    logits, caches = step(params, caches, tokens, pos)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+    # second step at the next position reuses the updated cache
+    logits2, caches = step(params, caches, tokens + 1, pos + 1)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "deepseek-v2-236b",
+                                  "mamba2-130m", "whisper-small"])
+def test_smoke_prefill(arch):
+    cfg = get_arch(arch).smoke
+    params = init_params(cfg, jax.random.key(2))
+    batch = _batch(cfg, B=2, S=8)
+    logits = jax.jit(lambda p, b: forward_prefill(cfg, p, b))(params, batch)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def test_decode_matches_prefill_dense():
+    """Decoding token-by-token must equal the parallel causal forward."""
+    cfg = get_arch("llama3.2-3b").smoke
+    params = init_params(cfg, jax.random.key(3))
+    B, S = 1, 6
+    rng = np.random.default_rng(2)
+    toks = rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks)}
+    # parallel logits
+    from repro.models.model import _backbone, _embed
+    from repro.models.layers import rmsnorm
+
+    def full_logits(p, b):
+        x = _embed(cfg, p, b["tokens"], b)
+        x = _backbone(cfg, p, x, jnp.arange(S)[None], None)
+        x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+        return jnp.einsum("bsd,dv->bsv", x, p["unembed"].astype(x.dtype))
+
+    ref = np.asarray(jax.jit(full_logits)(params, batch), np.float32)
+    caches = init_caches(cfg, B, S)
+    outs = []
+    for t in range(S):
+        logits, caches = jax.jit(
+            lambda p, c, tk, q: forward_decode(cfg, p, c, tk, q))(
+                params, caches, jnp.asarray(toks[:, t]),
+                jnp.full((B,), t, jnp.int32))
+        outs.append(np.asarray(logits, np.float32))
+    got = np.stack(outs, axis=1)
+    np.testing.assert_allclose(got, ref, atol=0.75, rtol=0.15)
+    # ranking agreement at the last step (bf16 tolerance-robust check)
+    assert got[0, -1].argmax() == ref[0, -1].argmax()
+
+
+def test_param_counts_match_published_class():
+    """Full configs must land in the published parameter-count class."""
+    expect = {
+        "qwen2-1.5b": (1.2e9, 2.2e9),
+        "deepseek-7b": (6e9, 8e9),
+        "command-r-35b": (30e9, 40e9),
+        "llama3.2-3b": (2.5e9, 4e9),
+        "mamba2-130m": (0.1e9, 0.2e9),
+        "internvl2-76b": (65e9, 85e9),
+        "deepseek-v2-236b": (200e9, 260e9),
+        "llama4-maverick-400b-a17b": (330e9, 440e9),
+        # zamba2: we model the shared block without its per-site LoRA
+        # adapters and with expand=1 per the assigned 32H spec, so the
+        # band is wider on the low side (see DESIGN.md)
+        "zamba2-1.2b": (0.5e9, 1.6e9),
+        # whisper-small publishes 244M with tied embeddings; we untie
+        "whisper-small": (0.15e9, 0.35e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_arch(arch).config.param_count()
+        assert lo <= n <= hi, (arch, f"{n:.3e}", lo, hi)
+
+
+def test_moe_local_vs_dispatch_semantics():
+    """moe_local == moe_dispatch on a trivial 1-device mesh context."""
+    import dataclasses
+    from repro.models import moe as moe_lib
+    cfg = get_arch("llama4-maverick-400b-a17b").smoke
+    cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = init_params(cfg, jax.random.key(0))
+    lp = jax.tree.map(lambda a: a[0], params["moe_blocks"]["moe"])
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 8, cfg.d_model)), jnp.float32)
+    y = moe_lib.moe_local(cfg, lp, x)
+    assert np.isfinite(np.asarray(y, np.float32)).all()
+    # every token got k experts' worth of output (no silent zeros with
+    # ample capacity): compare against explicit dense evaluation
+    gates, experts = moe_lib.router_topk(
+        x.reshape(-1, cfg.d_model), lp["router"], cfg.num_experts_per_tok)
+    dense = np.zeros((16, cfg.d_model), np.float32)
+    xe = np.asarray(x.reshape(-1, cfg.d_model), np.float32)
+    wg = np.asarray(lp["wg"], np.float32)
+    wu = np.asarray(lp["wu"], np.float32)
+    wd = np.asarray(lp["wd"], np.float32)
+    for t in range(16):
+        for j in range(cfg.num_experts_per_tok):
+            e = int(experts[t, j])
+            g = xe[t] @ wg[e]
+            u = xe[t] @ wu[e]
+            h = (g / (1 + np.exp(-g))) * u
+            dense[t] += float(gates[t, j]) * (h @ wd[e])
+    np.testing.assert_allclose(np.asarray(y).reshape(16, -1), dense,
+                               atol=2e-2, rtol=2e-2)

@@ -1,0 +1,46 @@
+"""Geometric-shrink distributed Borůvka (§Perf variant) vs oracle."""
+import pytest
+
+from tests.helpers.subproc import run_multidevice
+
+BODY = """
+from jax.sharding import Mesh
+from repro.core.distributed import build_dist_graph, distributed_msf
+from repro.core import oracle
+from repro.data import generators
+
+mesh = Mesh(np.array(jax.devices()), ("data",))
+for fam, n in [("gnm", 512), ("grid2d", 1024), ("rmat", 512)]:
+    u, v, w, nn = generators.generate(fam, n, avg_degree=8.0, seed=11)
+    g, cap = build_dist_graph(u, v, w, nn, 8)
+    _, expect = oracle.kruskal(u, v, w, nn)
+    ncomp = len(np.unique(oracle.component_labels(u, v, nn)))
+    for pre in (True, False):
+        mask, wt, cnt, labels = distributed_msf(
+            g, nn, mesh, algorithm="boruvka_shrink", axis_names=("data",),
+            local_preprocessing=pre)
+        assert abs(float(wt) - expect) < 1e-3 * max(1.0, expect), (
+            fam, pre, float(wt), expect)
+        assert int(cnt) == nn - ncomp, (fam, pre, int(cnt), nn - ncomp)
+        mk = np.asarray(mask)
+        assert oracle.is_forest(np.asarray(g.u)[mk], np.asarray(g.v)[mk],
+                                nn)
+# ties too
+rng = np.random.default_rng(1)
+u = rng.integers(0, 200, 1500).astype(np.int32)
+v = rng.integers(0, 200, 1500).astype(np.int32)
+keep = u != v
+w = rng.integers(1, 5, keep.sum()).astype(np.float32)
+g, cap = build_dist_graph(u[keep], v[keep], w, 200, 8)
+_, expect = oracle.kruskal(u[keep], v[keep], w, 200)
+mask, wt, cnt, _ = distributed_msf(g, 200, mesh,
+                                   algorithm="boruvka_shrink",
+                                   axis_names=("data",))
+assert abs(float(wt) - expect) < 1e-3 * expect, (float(wt), expect)
+print("OK")
+"""
+
+
+def test_shrink_variant_correct():
+    out = run_multidevice(BODY, ndev=8, timeout=900)
+    assert "OK" in out

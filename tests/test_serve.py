@@ -1,0 +1,52 @@
+"""Serving engine: batched decode slots, prompt prefill, refill."""
+import jax
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.models.model import init_params
+from repro.serve.engine import Request, ServeEngine
+
+
+def test_engine_completes_requests():
+    cfg = get_arch("qwen2-1.5b").smoke
+    params = init_params(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=64)
+    reqs = [Request(rid=i, prompt=[1 + i, 2 + i, 3 + i], max_new=5)
+            for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    for r in reqs:
+        assert r.done
+        assert len(r.out) == 5
+        assert all(0 <= t < cfg.vocab_size for t in r.out)
+
+
+def test_engine_greedy_matches_manual_decode():
+    cfg = get_arch("llama3.2-3b").smoke
+    params = init_params(cfg, jax.random.key(1))
+    prompt = [5, 9, 2]
+    eng = ServeEngine(cfg, params, batch_slots=1, max_len=32)
+    r = Request(rid=0, prompt=list(prompt), max_new=4)
+    eng.submit(r)
+    eng.run()
+    # manual: feed prompt through decode path then greedy-decode 4
+    from repro.models.model import forward_decode, init_caches
+    import jax.numpy as jnp
+    caches = init_caches(cfg, 1, 32)
+    step = jax.jit(lambda p, c, t, q: forward_decode(cfg, p, c, t, q))
+    pos = 0
+    logits = None
+    for t in prompt:
+        logits, caches = step(params, caches, jnp.asarray([t], jnp.int32),
+                              jnp.asarray([pos], jnp.int32))
+        pos += 1
+    out = []
+    for _ in range(4):
+        nxt = int(np.asarray(logits)[0].argmax())
+        out.append(nxt)
+        logits, caches = step(params, caches,
+                              jnp.asarray([nxt], jnp.int32),
+                              jnp.asarray([pos], jnp.int32))
+        pos += 1
+    assert r.out == out, (r.out, out)
