@@ -21,7 +21,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
 import jax, jax.numpy as jnp, numpy as np, json, time
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 from repro.comm.grid_alltoall import all_to_all_nd
 
 devices = np.array(jax.devices()).reshape(4, 4)

@@ -45,7 +45,7 @@ for fam in ("grid2d", "rgg2d", "rhg", "gnm"):
     # contracted fraction: run preprocessing alone
     from repro.core.distributed import _local_preprocessing
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from repro.compat import shard_map
     def body(uu, vv, ww, ee):
         valid = jnp.isfinite(ww)
         labels, mst = _local_preprocessing(uu, vv, ww, ee, valid, n,

@@ -17,9 +17,9 @@ import traceback
 def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (alltoall, kernels_bench, phases, preprocessing,
-                            strong_scaling, weak_scaling)
+                            sharded_scaling, strong_scaling, weak_scaling)
     for mod in (weak_scaling, alltoall, preprocessing, strong_scaling,
-                phases, kernels_bench):
+                sharded_scaling, phases, kernels_bench):
         try:
             mod.run()
         except Exception as e:  # keep the harness going; report the row

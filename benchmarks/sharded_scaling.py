@@ -1,0 +1,82 @@
+"""Replicated vs sharded vertex labels as n grows (paper Section IV).
+
+On one physical CPU the wall time of virtual-device runs measures
+overhead, not network behaviour, so the primary derived metric is the
+one that actually separates the two engines at scale: **per-device label
+state** — the replicated engine carries O(n) int32 labels on every
+device and allReduces n-vectors each round, the sharded engine carries
+O(n/p) and exchanges only routed candidates/lookups.  Wall time is
+reported for completeness (the routed exchange pays many small
+all-to-alls on virtual devices, so it is expected to be slower *here*;
+EXPERIMENTS.md §Sharded-label engine).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit
+
+SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np, json, time
+from jax.sharding import Mesh
+from repro.core.distributed import build_dist_graph, distributed_msf
+from repro.core.distributed_sharded import (distributed_sharded_msf,
+                                            vertices_per_shard)
+from repro.data import generators
+
+p = 8
+mesh = Mesh(np.array(jax.devices()), ("data",))
+out = {}
+for n in (1 << 10, 1 << 12, 1 << 14):
+    u, v, w, nn = generators.generate("gnm", n, avg_degree=8.0, seed=3)
+    g, cap = build_dist_graph(u, v, w, nn, p)
+    rec = {}
+    for name, run in (
+        ("replicated", lambda: distributed_msf(
+            g, nn, mesh, algorithm="boruvka", axis_names=("data",))),
+        ("sharded", lambda: distributed_sharded_msf(
+            g, nn, mesh, algorithm="boruvka", axis_names=("data",))),
+    ):
+        res = run()
+        jax.block_until_ready(res[0])
+        t0 = time.perf_counter()
+        res = run()
+        jax.block_until_ready(res[0])
+        us = (time.perf_counter() - t0) * 1e6
+        label_ints = nn if name == "replicated" else vertices_per_shard(nn, p)
+        rec[name] = {"us": us, "label_ints_per_device": label_ints,
+                     "weight": float(res[1])}
+    assert abs(rec["replicated"]["weight"] - rec["sharded"]["weight"]) \
+        < 1e-3 * max(1.0, rec["replicated"]["weight"])
+    out[n] = rec
+print(json.dumps(out))
+"""
+
+
+def run() -> None:
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1800)
+    if proc.returncode != 0:
+        emit("sharded_scaling/error", 0.0,
+             proc.stderr[-200:].replace(",", ";"))
+        return
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    for n, rec in out.items():
+        shrink = (rec["replicated"]["label_ints_per_device"]
+                  / max(rec["sharded"]["label_ints_per_device"], 1))
+        for name in ("replicated", "sharded"):
+            emit(f"sharded_scaling/gnm/n={n}/{name}", rec[name]["us"],
+                 f"label_ints_per_device="
+                 f"{rec[name]['label_ints_per_device']};"
+                 f"label_memory_shrink_vs_replicated="
+                 f"{shrink if name == 'sharded' else 1.0:.1f}x")

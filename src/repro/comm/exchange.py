@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
 from repro.comm.grid_alltoall import all_to_all_nd
 
 
@@ -62,7 +63,7 @@ def routed_exchange(payload, dest: jax.Array, valid: jax.Array,
     names = tuple(axis_names)
     p = 1
     for n in names:
-        p *= lax.axis_size(n)
+        p *= compat.axis_size(n)
     L = dest.shape[0]
     pos = _group_positions(dest, valid, p)
     ok = valid & (pos < capacity) & (dest >= 0) & (dest < p)
@@ -71,12 +72,16 @@ def routed_exchange(payload, dest: jax.Array, valid: jax.Array,
     s_idx = jnp.where(ok, pos, 0)
 
     def scatter(x):
-        buf = jnp.zeros((p, capacity) + x.shape[1:], x.dtype)
+        # freshly created buffers are unvarying; promote them before the
+        # scatter of per-shard data so the module passes check_vma on
+        # JAX >= 0.6 (no-op on 0.4.x — see repro.compat)
+        buf = compat.vary(jnp.zeros((p, capacity) + x.shape[1:], x.dtype),
+                          names)
         return buf.at[d_idx, s_idx].set(x, mode="drop")
 
     send = jax.tree.map(scatter, payload)
-    send_mask = jnp.zeros((p, capacity), bool).at[d_idx, s_idx].set(
-        ok, mode="drop")
+    send_mask = compat.vary(jnp.zeros((p, capacity), bool), names).at[
+        d_idx, s_idx].set(ok, mode="drop")
     recv = jax.tree.map(lambda b: all_to_all_nd(b, names, schedule), send)
     recv_ok = all_to_all_nd(send_mask, names, schedule)
     overflow = lax.psum(jnp.sum((valid & ~ok).astype(jnp.int32)), names)

@@ -31,9 +31,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
+
 
 def axis_sizes(names: Sequence[str]) -> Tuple[int, ...]:
-    return tuple(lax.axis_size(n) for n in names)
+    return tuple(compat.axis_size(n) for n in names)
 
 
 def grid_all_to_all(x: jax.Array, axis_names: Tuple[str, str]) -> jax.Array:
@@ -44,7 +46,7 @@ def grid_all_to_all(x: jax.Array, axis_names: Tuple[str, str]) -> jax.Array:
     Must be called inside shard_map with both axes present.
     """
     row, col = axis_names
-    r, c = lax.axis_size(row), lax.axis_size(col)
+    r, c = compat.axis_size(row), compat.axis_size(col)
     p = r * c
     assert x.shape[0] == p, (x.shape, p)
     xr = x.reshape((r, c) + x.shape[1:])

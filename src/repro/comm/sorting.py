@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
 from repro.comm.exchange import routed_exchange
 
 
@@ -42,7 +43,7 @@ def sample_sort(key: jax.Array, payload, valid: jax.Array,
     names = tuple(axis_names)
     p = 1
     for n in names:
-        p *= lax.axis_size(n)
+        p *= compat.axis_size(n)
     L = key.shape[0]
     kf = jnp.where(valid, key, jnp.inf).astype(jnp.float32)
     order = jnp.argsort(kf, stable=True)

@@ -13,8 +13,9 @@ min-edge reduction then becomes per-shard scatter-min + one
 ``allReduce(min)`` of an n-vector, and pointer doubling is a local
 computation.  This is the *baseline* distribution; the sharded-label
 variant with the sparse routed exchange (the paper's scalable path for
-n >> memory/PE) lives in ``distributed_sharded.py`` and is the perf
-iteration documented in EXPERIMENTS.md §Perf.
+n >> memory/PE) lives in ``distributed_sharded.py`` and is documented in
+EXPERIMENTS.md §Sharded-label engine (version-portability policy for
+both engines: EXPERIMENTS.md §Compat).
 
 Pipeline per the paper's Algorithm 1:
   LOCALPREPROCESSING   -> comm-free contraction of provably-local MST
@@ -38,7 +39,14 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.graph import INVALID_W
+
+# "no chosen edge" sentinel in eid space, shared by every engine (and
+# distributed_sharded.py) so the (w, eid) total orders can never diverge.
+# Host-side np constant: a jnp scalar would initialize the backend at
+# import time and lock the device count.
+ESENT = np.int32(2 ** 30)
 
 
 class DistGraph(NamedTuple):
@@ -97,8 +105,7 @@ def _doubling_iters(n: int) -> int:
 
 def _vary(x, axes):
     """pvary only the axes the value is not already varying over."""
-    missing = tuple(a for a in axes if a not in jax.typeof(x).vma)
-    return lax.pvary(x, missing) if missing else x
+    return compat.vary(x, axes)
 
 
 def _shared_vertex_root_mask(u: jax.Array, valid: jax.Array, n: int,
@@ -158,9 +165,18 @@ def _local_preprocessing(u, v, w, eid, valid, n: int,
         alive = (ru != rv) & valid
         wk = jnp.where(alive, w, jnp.inf)
         wmin = jnp.full((n,), jnp.inf, w.dtype).at[ru].min(wk).at[rv].min(wk)
+        # tie-break by the *global undirected* eid (not the local slot) so
+        # the contracted edges are a subset of the unique (w, eid) MSF —
+        # the same total order every engine and the oracle use
+        esent = ESENT
+        at_min_u = jnp.isfinite(wk) & (wk == wmin[ru])
+        at_min_v = jnp.isfinite(wk) & (wk == wmin[rv])
+        eminid = jnp.full((n,), esent, jnp.int32)
+        eminid = eminid.at[ru].min(jnp.where(at_min_u, eid, esent))
+        eminid = eminid.at[rv].min(jnp.where(at_min_v, eid, esent))
         slot = jnp.arange(cap, dtype=jnp.int32)
-        cu = jnp.where(jnp.isfinite(wk) & (wk == wmin[ru]), slot, sent)
-        cv = jnp.where(jnp.isfinite(wk) & (wk == wmin[rv]), slot, sent)
+        cu = jnp.where(at_min_u & (eid == eminid[ru]), slot, sent)
+        cv = jnp.where(at_min_v & (eid == eminid[rv]), slot, sent)
         emin = jnp.full((n,), sent, jnp.int32).at[ru].min(cu).at[rv].min(cv)
         has = emin < sent
         ce = jnp.clip(emin, 0, cap - 1)
@@ -208,7 +224,7 @@ def _distributed_rounds(u, v, w, eid, valid, labels, mst, n: int,
     """
     cap = u.shape[0]
     iota = jnp.arange(n, dtype=jnp.int32)
-    esent = jnp.int32(2 ** 30)
+    esent = ESENT
 
     live = valid if active is None else (valid & active)
 
@@ -285,7 +301,7 @@ def _distributed_rounds_shrink(u, v, w, eid, valid, labels, mst, n: int,
     """
     cap = u.shape[0]
     iota = jnp.arange(n, dtype=jnp.int32)
-    esent = jnp.int32(2 ** 30)
+    esent = ESENT
     rounds = _doubling_iters(n) + 1
 
     # active-slot mapping over vertex-label space; initially every vertex
@@ -417,7 +433,7 @@ def _build_msf_fn(n: int, mesh: jax.sharding.Mesh, axes: Tuple[str, ...],
                  local_preprocessing=local_preprocessing,
                  num_levels=num_levels, max_rounds=max_rounds)
     spec = P(axes)
-    return jax.jit(jax.shard_map(
+    return jax.jit(compat.shard_map(
         fn, mesh=mesh,
         in_specs=(spec, spec, spec, spec),
         out_specs=(spec, P(), P(), P())))

@@ -1,0 +1,320 @@
+"""Sharded-label distributed Borůvka / Filter-Borůvka (Section IV, the
+scalable path for n >> memory/PE).
+
+``core/distributed.py`` replicates the vertex→component label vector on
+every shard, which costs O(n) memory per PE and an allReduce of
+n-vectors per round — the paper's *base case*.  This module implements
+the representation the paper's 65 536-core runs rely on: the label
+vector is **1D-sharded by vertex id** (owner of vertex ``vid`` is shard
+``vid // vertices_per_shard``) and every label access becomes a routed
+message through the capacity-bounded exchange of ``comm/exchange.py``
+(the XLA-native stand-in for the paper's sparse ``MPI_Alltoallv``):
+
+  MINEDGES   Each edge shard looks up the component of both endpoints
+             from the owners (request/reply), scatter-mins locally over
+             *nothing* — instead it ships one ``(component, w, eid,
+             other_component)`` candidate per directed copy to the
+             component's owner, which scatter-mins over its owned slots
+             only.  Winning candidates are confirmed back to the sending
+             edge slot so the canonical (u < v) copy can be marked.
+  CONTRACT   Pointer doubling over the sharded parent array: each
+             doubling step is one request_reply round asking
+             ``owner(parent[x])`` for ``parent[parent[x]]``
+             (EXCHANGELABELS).  The 2-cycle of a pair of components that
+             choose each other is broken toward the smaller id, exactly
+             as in the replicated engine.
+  RELABEL    Every owned vertex re-resolves its label through one more
+             lookup of the contracted parent array.
+
+Per-shard label memory is O(n/p) instead of O(n); all exchanges are
+capacity-bounded with explicit overflow accounting (never silent): with
+the default capacities (``edge_capacity = edges/shard``,
+``label_capacity = vertices/shard``) overflow is impossible and results
+are exact; undersized capacities report a positive overflow count and
+the caller must retry larger (EXPERIMENTS.md §Sharded-label engine).
+
+Tie-breaking is the direction-independent ``(w, eid)`` order shared by
+all engines and the Kruskal oracle, so the produced MSF edge set is
+bit-identical across engines (tests/test_engine_equivalence.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.comm.exchange import reply, routed_exchange
+from repro.core.distributed import (ESENT, DistGraph, _doubling_iters,
+                                    _weight_pivots)
+
+
+# --------------------------------------------------------------------------
+# sharded building blocks (all run inside shard_map)
+# --------------------------------------------------------------------------
+
+def _sharded_lookup(table: jax.Array, vids: jax.Array, valid: jax.Array,
+                    vps: int, capacity: int, axes: Tuple[str, ...],
+                    schedule: str = "grid"):
+    """Resolve ``table[vids[i]]`` where ``table`` is 1D-sharded by id.
+
+    ``table`` is this shard's [vps] slice of a global [p * vps] int32
+    array; ``vids`` are global ids.  Owner routing: the request carries
+    the id itself, the owner answers ``table[id - base]``, the answer is
+    routed back to the requesting slot (the paper's request/reply label
+    exchange).  Returns (values [L], ok [L], overflow) — entries with
+    ``ok`` False overflowed the exchange and carry garbage.
+    """
+    names = tuple(axes)
+    base = lax.axis_index(names) * vps
+    ex = routed_exchange(vids, vids // vps, valid, capacity, names, schedule)
+    off = jnp.clip(ex.recv - base, 0, vps - 1)
+    answers = jnp.where(ex.recv_ok, table[off], jnp.int32(-1))
+    out = reply(ex, answers, names, schedule)
+    return out, ex.sent_ok, ex.overflow
+
+
+def _sharded_minedges(ru, rv, wk, eid, alive, vps: int, capacity: int,
+                      axes: Tuple[str, ...], schedule: str = "grid"):
+    """Owner-computes MINEDGES over sharded component slots.
+
+    Each *directed* edge copy ships a ``(comp, w, eid, other)`` candidate
+    to the owner of both its source component (keyed ``ru``) and its
+    destination component (keyed ``rv``): together they hand every owner
+    all edges incident to its components.  The owner scatter-mins with
+    the (w, eid) order over its [vps] slots and confirms winners back to
+    the submitting slot, so the caller can mark the canonical copy.
+
+    Returns (has [vps], other [vps], win [L], overflow).
+    """
+    names = tuple(axes)
+    base = lax.axis_index(names) * vps
+    ex_u = routed_exchange((ru, wk, eid, rv), ru // vps, alive, capacity,
+                           names, schedule)
+    ex_v = routed_exchange((rv, wk, eid, ru), rv // vps, alive, capacity,
+                           names, schedule)
+
+    def flat(ex):
+        comp, w_, e_, o_ = ex.recv
+        return (comp.reshape(-1), w_.reshape(-1), e_.reshape(-1),
+                o_.reshape(-1), ex.recv_ok.reshape(-1))
+
+    ku, wu, eu, ou, oku = flat(ex_u)
+    kv, wv, ev, ov, okv = flat(ex_v)
+    comp = jnp.concatenate([ku, kv])
+    wc = jnp.concatenate([wu, wv])
+    ec = jnp.concatenate([eu, ev])
+    oc = jnp.concatenate([ou, ov])
+    okc = jnp.concatenate([oku, okv])
+    # slot vps is the drop row for unused buffer entries
+    off = jnp.where(okc, comp - base, vps)
+    wmin = jnp.full((vps + 1,), jnp.inf, wc.dtype).at[off].min(
+        jnp.where(okc, wc, jnp.inf))
+    at_min = okc & (wc == wmin[off])
+    emin = jnp.full((vps + 1,), ESENT, jnp.int32).at[off].min(
+        jnp.where(at_min, ec, ESENT))
+    is_win = at_min & (ec == emin[off])
+    other = jnp.full((vps + 1,), -1, jnp.int32).at[off].max(
+        jnp.where(is_win, oc, -1))
+    has = emin[:vps] < ESENT
+    # confirm winners to the submitting slots (both exchanges carry the
+    # same (w, eid) for the two copies of an undirected edge, so a slot
+    # wins iff either of its endpoint components chose it)
+    nu = ku.shape[0]
+    win_u = reply(ex_u, is_win[:nu].reshape(ex_u.recv_ok.shape), names,
+                  schedule)
+    win_v = reply(ex_v, is_win[nu:].reshape(ex_v.recv_ok.shape), names,
+                  schedule)
+    win = (win_u & ex_u.sent_ok) | (win_v & ex_v.sent_ok)
+    return has, other[:vps], win, ex_u.overflow + ex_v.overflow
+
+
+def _sharded_contract(has, other, n: int, vps: int, capacity: int,
+                      axes: Tuple[str, ...], schedule: str = "grid"):
+    """Pointer doubling over the sharded parent array (request/reply).
+
+    Every owned slot is a potential component root: roots with a chosen
+    edge point at the other endpoint's component, everything else at
+    itself.  The 2-cycle of mutually chosen components keeps the smaller
+    id as root; then log2(n) doubling rounds, each one routed lookup.
+    Returns (parent [vps] fully contracted, overflow).
+    """
+    names = tuple(axes)
+    base = lax.axis_index(names) * vps
+    vid = base + jnp.arange(vps, dtype=jnp.int32)
+    ones = compat.vary(jnp.ones((vps,), bool), names)
+    parent = jnp.where(has, other, vid)
+    gp, _, ov0 = _sharded_lookup(parent, parent, ones, vps, capacity,
+                                 names, schedule)
+    parent = jnp.where((gp == vid) & (vid < parent), vid, parent)
+
+    def dbl(_, carry):
+        par, ov = carry
+        nxt, _, o = _sharded_lookup(par, par, ones, vps, capacity, names,
+                                    schedule)
+        return nxt, ov + o
+
+    parent, ov = lax.fori_loop(0, _doubling_iters(n), dbl, (parent, ov0))
+    return parent, ov
+
+
+def _sharded_rounds(u, v, w, eid, valid, lab, mst, n: int, vps: int,
+                    axes: Tuple[str, ...], active: Optional[jax.Array],
+                    max_rounds: int, cap_edge: int, cap_label: int,
+                    overflow, schedule: str = "grid"):
+    """Borůvka rounds with 1D-sharded labels.
+
+    ``active`` optionally restricts the edge set (the filter levels).
+    The loop carry is (lab [vps], mst [cap], go, round, overflow).
+    """
+    names = tuple(axes)
+    live = valid if active is None else (valid & active)
+
+    def round_(state):
+        lab, mst, _, r, ovf = state
+        ru, ok_u, o1 = _sharded_lookup(lab, u, live, vps, cap_edge, names,
+                                       schedule)
+        rv, ok_v, o2 = _sharded_lookup(lab, v, live, vps, cap_edge, names,
+                                       schedule)
+        alive = ok_u & ok_v & (ru != rv) & live
+        wk = jnp.where(alive, w, jnp.inf)
+        has, other, win, o3 = _sharded_minedges(ru, rv, wk, eid, alive,
+                                                vps, cap_edge, names,
+                                                schedule)
+        # each undirected MSF edge is confirmed on both directed copies;
+        # mark only the canonical one so the global mask is exact-once
+        mst = mst | (win & (u < v))
+        parent, o4 = _sharded_contract(has, other, n, vps, cap_label,
+                                       names, schedule)
+        lab, _, o5 = _sharded_lookup(
+            parent, lab, compat.vary(jnp.ones((vps,), bool), names), vps,
+            cap_label, names, schedule)
+        go = lax.psum(jnp.sum(has.astype(jnp.int32)), names) > 0
+        return lab, mst, go, r + 1, ovf + o1 + o2 + o3 + o4 + o5
+
+    def cond(state):
+        return state[2] & (state[3] < max_rounds)
+
+    lab, mst, _, _, overflow = lax.while_loop(
+        cond, round_,
+        (lab, mst, jnp.array(True), jnp.int32(0), overflow))
+    return lab, mst, overflow
+
+
+# --------------------------------------------------------------------------
+# the full per-shard program + host wrapper
+# --------------------------------------------------------------------------
+
+def _sharded_shard_fn(u, v, w, eid, n: int, vps: int,
+                      axes: Tuple[str, ...], algorithm: str,
+                      num_levels: int, max_rounds: Optional[int],
+                      cap_edge: int, cap_label: int, schedule: str):
+    names = tuple(axes)
+    valid = jnp.isfinite(w)
+    base = lax.axis_index(names) * vps
+    lab = base + jnp.arange(vps, dtype=jnp.int32)
+    mst = compat.vary(jnp.zeros(u.shape, bool), names)
+    # psum outputs are axis-invariant, so the overflow accumulator (and
+    # the loop's ``go`` flag) stay unvarying on both JAX generations
+    overflow = jnp.int32(0)
+    mr = (math.ceil(math.log2(max(n, 2))) + 1) if max_rounds is None \
+        else max_rounds
+
+    if algorithm == "boruvka":
+        lab, mst, overflow = _sharded_rounds(
+            u, v, w, eid, valid, lab, mst, n, vps, names, None, mr,
+            cap_edge, cap_label, overflow, schedule)
+    elif algorithm == "filter_boruvka":
+        pivots = _weight_pivots(w, valid, num_levels, names)
+        lo = jnp.float32(-jnp.inf)
+        for lvl in range(num_levels):
+            hi = pivots[lvl] if lvl < num_levels - 1 else jnp.float32(jnp.inf)
+            active = (w > lo) & (w <= hi)
+            lab, mst, overflow = _sharded_rounds(
+                u, v, w, eid, valid, lab, mst, n, vps, names, active, mr,
+                cap_edge, cap_label, overflow, schedule)
+            lo = hi
+    else:
+        raise ValueError(algorithm)
+
+    weight = lax.psum(jnp.sum(jnp.where(mst, w, 0.0)), names)
+    count = lax.psum(jnp.sum(mst.astype(jnp.int32)), names)
+    return mst, weight, count, lab, overflow
+
+
+@functools.lru_cache(maxsize=64)
+def _build_sharded_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
+                      axes: Tuple[str, ...], algorithm: str,
+                      num_levels: int, max_rounds: Optional[int],
+                      cap_edge: int, cap_label: int, schedule: str):
+    fn = partial(_sharded_shard_fn, n=n, vps=vps, axes=axes,
+                 algorithm=algorithm, num_levels=num_levels,
+                 max_rounds=max_rounds, cap_edge=cap_edge,
+                 cap_label=cap_label, schedule=schedule)
+    spec = P(axes)
+    return jax.jit(compat.shard_map(
+        fn, mesh=mesh,
+        in_specs=(spec, spec, spec, spec),
+        out_specs=(spec, P(), P(), spec, P())))
+
+
+def vertices_per_shard(n: int, num_shards: int) -> int:
+    return max(1, -(-n // num_shards))
+
+
+def distributed_sharded_msf(graph: DistGraph, n: int,
+                            mesh: jax.sharding.Mesh, *,
+                            algorithm: str = "boruvka",
+                            axis_names: Optional[Sequence[str]] = None,
+                            num_levels: int = 4,
+                            max_rounds: Optional[int] = None,
+                            edge_capacity: Optional[int] = None,
+                            label_capacity: Optional[int] = None,
+                            schedule: str = "grid"):
+    """Run the sharded-label distributed MSF on a mesh.
+
+    Returns (mask, weight, count, labels, overflow):
+      * ``mask`` is aligned with ``graph`` slots, one canonical directed
+        copy per MSF edge;
+      * ``labels`` is the *sharded* label vector laid out shard-major
+        ([p * vertices_per_shard], slice [:n] for the per-vertex view);
+      * ``overflow`` counts exchange items that exceeded capacity summed
+        over all rounds — results are exact iff it is 0 (guaranteed with
+        the default capacities); callers passing smaller capacities must
+        retry larger on a positive count.
+    """
+    axes = tuple(axis_names or mesh.axis_names)
+    p = 1
+    for a in axes:
+        p *= mesh.shape[a]
+    vps = vertices_per_shard(n, p)
+    cap = graph.cap_total // p
+    # is-None (not falsy) checks: an explicit 0 must be honored — it
+    # yields all-overflow results, which the overflow count reports
+    ce = int(cap if edge_capacity is None else edge_capacity)
+    cl = int(vps if label_capacity is None else label_capacity)
+    shard_fn = _build_sharded_fn(n, vps, mesh, axes, algorithm, num_levels,
+                                 max_rounds, ce, cl, schedule)
+    return shard_fn(graph.u, graph.v, graph.w, graph.eid)
+
+
+def make_sharded_mst_step(n: int, cap_total: int, mesh: jax.sharding.Mesh,
+                          algorithm: str = "boruvka", **kw):
+    """AOT-lowerable sharded MSF step (dry-run/roofline harness parity)."""
+    def step(u, v, w, eid):
+        g = DistGraph(u, v, w, eid)
+        return distributed_sharded_msf(g, n, mesh, algorithm=algorithm, **kw)
+
+    specs = (
+        jax.ShapeDtypeStruct((cap_total,), jnp.int32),
+        jax.ShapeDtypeStruct((cap_total,), jnp.int32),
+        jax.ShapeDtypeStruct((cap_total,), jnp.float32),
+        jax.ShapeDtypeStruct((cap_total,), jnp.int32),
+    )
+    return step, specs

@@ -283,7 +283,11 @@ class RooflineTerms:
 
 
 def cost_summary(compiled) -> Dict[str, float]:
+    # cost_analysis() returns one dict on JAX >= 0.5 but a one-element
+    # list of dicts on 0.4.x (see repro.compat for the policy)
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0))}
 

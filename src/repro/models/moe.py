@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.comm.exchange import _group_positions
 from repro.comm.grid_alltoall import all_to_all_nd
 from repro.configs.base import ModelConfig
@@ -119,7 +120,7 @@ def moe_dispatch(cfg: ModelConfig, p: dict, x: jax.Array,
         wd = lax.all_gather(wd, dp, axis=1, tiled=True)
         pe = 1
         for a in ep:
-            pe *= lax.axis_size(a)
+            pe *= compat.axis_size(a)
         B, S, D = x_l.shape
         x2d = x_l.reshape(B * S, D)
         T = x2d.shape[0]
@@ -143,7 +144,7 @@ def moe_dispatch(cfg: ModelConfig, p: dict, x: jax.Array,
         ].add(ybuf.reshape(E * C, D), mode="drop")
         return y.reshape(B, S, D)
 
-    return jax.shard_map(
+    return compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(dp, ep, None), P(), P(ep, None, dp),
                   P(ep, None, dp), P(ep, dp, None)),

@@ -1,0 +1,14 @@
+"""Shared test configuration.
+
+``hypothesis`` is a dev-only dependency (requirements-dev.txt).  The
+modules that use it guard the import themselves and skip only their
+property-based tests when it is absent (plain tests keep running); this
+conftest just makes the degraded mode visible in the report header.
+"""
+
+def pytest_report_header(config):
+    from tests.helpers.hypothesis_compat import HAVE_HYPOTHESIS
+    if not HAVE_HYPOTHESIS:
+        return ("hypothesis not installed - property-based tests are "
+                "skipped (pip install -r requirements-dev.txt)")
+    return None

@@ -1,0 +1,74 @@
+"""Adversarial graph families shared by the cross-engine oracle matrix.
+
+Used in-process by tests/test_engine_equivalence.py and injected into
+its multi-device subprocess via ``inspect.getsource`` so both matrices
+are guaranteed to test the *same* graphs.  Self-contained on purpose:
+only numpy at module scope, generators imported lazily (the subprocess
+injects this source before its own imports).
+"""
+import numpy as np
+
+
+def fam_random(seed, n=256, m=1500):
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, n, m).astype(np.int32)
+    v = rng.integers(0, n, m).astype(np.int32)
+    keep = u != v
+    w = rng.uniform(1.0, 255.0, keep.sum()).astype(np.float32)
+    return u[keep], v[keep], w, n
+
+
+def fam_clustered(seed):
+    from repro.data import generators
+    return generators.generate("rmat", 256, avg_degree=8.0, seed=seed)
+
+
+def fam_dup_weights(seed, n=200, m=1600):
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, n, m).astype(np.int32)
+    v = rng.integers(0, n, m).astype(np.int32)
+    keep = u != v
+    w = rng.integers(1, 6, keep.sum()).astype(np.float32)  # heavy ties
+    return u[keep], v[keep], w, n
+
+
+def fam_disconnected(seed, blocks=3, bn=64):
+    rng = np.random.default_rng(seed)
+    us, vs = [], []
+    for b in range(blocks):
+        lo = b * bn
+        u = rng.integers(lo, lo + bn, 200)
+        v = rng.integers(lo, lo + bn, 200)
+        keep = u != v
+        us.append(u[keep])
+        vs.append(v[keep])
+    u = np.concatenate(us).astype(np.int32)
+    v = np.concatenate(vs).astype(np.int32)
+    w = rng.uniform(1.0, 255.0, len(u)).astype(np.float32)
+    # + isolated vertices beyond the blocks
+    return u, v, w, blocks * bn + 16
+
+
+def fam_selfloops(seed, n=180, m=1200):
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, n, m).astype(np.int32)
+    v = rng.integers(0, n, m).astype(np.int32)
+    keep = u != v
+    u, v = u[keep], v[keep]
+    w = rng.uniform(10.0, 255.0, len(u)).astype(np.float32)
+    # self-loops LIGHTER than every real edge: any engine that fails to
+    # exclude them would prefer them in the min-reduction
+    sl = rng.integers(0, n, 40).astype(np.int32)
+    u = np.concatenate([u, sl])
+    v = np.concatenate([v, sl])
+    w = np.concatenate([w, np.full(40, 0.5, np.float32)])
+    return u, v, w, n
+
+
+FAMILIES = {
+    "random": fam_random,
+    "clustered": fam_clustered,
+    "dup_weights": fam_dup_weights,
+    "disconnected": fam_disconnected,
+    "selfloops": fam_selfloops,
+}

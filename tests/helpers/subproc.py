@@ -24,12 +24,16 @@ def run_multidevice(body: str, ndev: int = 8, timeout: int = 600) -> str:
     """
     prelude = textwrap.dedent(f"""
         import os
-        os.environ["XLA_FLAGS"] = (
-            "--xla_force_host_platform_device_count={ndev} "
-            + os.environ.get("XLA_FLAGS", ""))
+        # drop any inherited device-count flag (e.g. CI exports one for
+        # directly-run snippets) so this script's count always wins
+        inherited = [f for f in os.environ.get("XLA_FLAGS", "").split()
+                     if "xla_force_host_platform_device_count" not in f]
+        os.environ["XLA_FLAGS"] = " ".join(
+            ["--xla_force_host_platform_device_count={ndev}"] + inherited)
         import jax
         import jax.numpy as jnp
         import numpy as np
+        from repro.compat import shard_map  # version-bridged (see repro/compat.py)
         assert jax.device_count() == {ndev}, jax.device_count()
     """)
     script = prelude + textwrap.dedent(body)

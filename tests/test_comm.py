@@ -8,7 +8,7 @@ from tests.helpers.subproc import run_multidevice
 GRID_EQ = """
 from functools import partial
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 from repro.comm.grid_alltoall import grid_all_to_all, direct_all_to_all, all_to_all_nd
 
 devices = np.array(jax.devices()).reshape(4, 2)
@@ -46,7 +46,7 @@ print("OK")
 
 EXCHANGE = """
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 from repro.comm.exchange import routed_exchange, request_reply
 
 devices = np.array(jax.devices()).reshape(4, 2)
@@ -105,7 +105,7 @@ print("OK")
 
 SORT = """
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 from repro.comm.sorting import sample_sort
 
 devices = np.array(jax.devices()).reshape(4, 2)

@@ -57,7 +57,7 @@ print("OK")
 
 PREPROCESSING_EFFECT = """
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 from repro.core.distributed import (build_dist_graph, _local_preprocessing)
 from repro.data import generators
 import jax.numpy as jnp

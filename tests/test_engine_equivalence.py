@@ -1,0 +1,110 @@
+"""Cross-engine oracle matrix: every MSF engine must produce the *unique*
+(w, eid)-order MSF of the Kruskal oracle — same weight, same edge set.
+
+Engines: static boruvka / filter_boruvka, dynamic boruvka /
+filter_boruvka (in-process), distributed (replicated labels) and
+distributed_sharded (1D-sharded labels + routed exchange) on 8 virtual
+devices through the public ``minimum_spanning_forest`` dispatch
+(subprocess; main process keeps 1 device).
+
+Graph families (tests/helpers/graph_families.py, shared verbatim with
+the subprocess): uniform random, clustered (RMAT), duplicate weights
+(heavy ties — exercises the eid tie-break), disconnected (forest, not
+tree), and self-loops lighter than every real edge (must never be
+chosen).  Randomised over seeds; a hypothesis fuzz pass runs on top
+when hypothesis is installed.
+"""
+import inspect
+
+import numpy as np
+import pytest
+
+from repro.core import oracle
+from repro.core.boruvka import boruvka_msf
+from repro.core.filter_boruvka import (boruvka_dynamic,
+                                       filter_boruvka_dynamic,
+                                       filter_boruvka_msf)
+from tests.helpers import graph_families
+from tests.helpers.graph_families import FAMILIES
+from tests.helpers.hypothesis_compat import given, settings, st
+from tests.helpers.subproc import run_multidevice
+
+
+ENGINES = {
+    "boruvka_msf": lambda u, v, w, n: boruvka_msf(u, v, w, n)[0],
+    "filter_boruvka_msf":
+        lambda u, v, w, n: filter_boruvka_msf(u, v, w, n, num_buckets=4)[0],
+    "boruvka_dynamic": lambda u, v, w, n: boruvka_dynamic(u, v, w, n)[0],
+    "filter_boruvka_dynamic":
+        lambda u, v, w, n: filter_boruvka_dynamic(u, v, w, n)[0],
+}
+
+
+def _assert_matches_oracle(mask, u, v, w, n, ctx):
+    kmask, kweight = oracle.kruskal(u, v, w, n)
+    mask = np.asarray(mask)
+    assert np.array_equal(np.nonzero(mask)[0], np.nonzero(kmask)[0]), (
+        ctx, "edge set differs from the (w, eid) oracle MSF")
+    got = float(np.sum(w[mask]))
+    assert abs(got - kweight) < 1e-3 * max(1.0, kweight), (ctx, got, kweight)
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("engine", sorted(ENGINES))
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_local_engines_match_oracle(family, engine, seed):
+    u, v, w, n = FAMILIES[family](seed)
+    mask = ENGINES[engine](u, v, w, n)
+    _assert_matches_oracle(mask, u, v, w, n, (family, engine, seed))
+
+
+# --------------------------------------------------------------------------
+# distributed engines (8 virtual devices >= 4 shards, subprocess)
+# --------------------------------------------------------------------------
+
+# the exact same family builders, injected as source so the two matrices
+# cannot drift apart
+DISTRIBUTED = inspect.getsource(graph_families) + """
+from jax.sharding import Mesh
+from repro.core import oracle
+from repro.core.graph import from_numpy
+from repro.core.mst import minimum_spanning_forest
+
+mesh = Mesh(np.array(jax.devices()), ("data",))
+
+for fam, make in sorted(FAMILIES.items()):
+    u, v, w, n = make(0)
+    edges = from_numpy(u, v, w, n)
+    kmask, kweight = oracle.kruskal(u, v, w, n)
+    for engine in ("distributed", "distributed_sharded"):
+        for algo in ("boruvka", "filter_boruvka"):
+            mask, wt = minimum_spanning_forest(
+                edges, algorithm=algo, engine=engine, mesh=mesh)
+            mk = np.asarray(mask)
+            assert np.array_equal(np.nonzero(mk)[0], np.nonzero(kmask)[0]), (
+                fam, engine, algo, "edge set differs from oracle")
+            assert abs(float(wt) - kweight) < 1e-3 * max(1.0, kweight), (
+                fam, engine, algo, float(wt), kweight)
+print("OK")
+"""
+
+
+def test_distributed_engines_match_oracle():
+    out = run_multidevice(DISTRIBUTED, ndev=8, timeout=1800)
+    assert "OK" in out
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_property_random_graphs_match_oracle(data):
+    n = data.draw(st.integers(2, 40), label="n")
+    m = data.draw(st.integers(0, 120), label="m")
+    seed = data.draw(st.integers(0, 2 ** 31 - 1), label="seed")
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, n, m).astype(np.int32)
+    v = rng.integers(0, n, m).astype(np.int32)
+    # intentionally keep self-loops and parallel edges
+    w = rng.integers(1, 8, m).astype(np.float32)
+    for engine, fn in sorted(ENGINES.items()):
+        mask = fn(u, v, w, n)
+        _assert_matches_oracle(mask, u, v, w, n, (engine, n, m, seed))

@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests.helpers.hypothesis_compat import given, settings, st
 
 from repro.kernels.segmin.ops import min_edges_dense
 from repro.kernels.segmin.ref import (dense_min_from_candidates,

@@ -1,7 +1,8 @@
 """Core MSF correctness: jittable Borůvka + Filter-Borůvka vs Kruskal oracle."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests.helpers.hypothesis_compat import given, settings, st
 
 from repro.core import oracle
 from repro.core.boruvka import boruvka_msf
