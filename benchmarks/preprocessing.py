@@ -29,14 +29,14 @@ for fam in ("grid2d", "rgg2d", "rhg", "gnm"):
     rec = {}
     for pre in (True, False):
         t0 = time.perf_counter()
-        mask, wt, cnt, labels = distributed_msf(
+        mask, wt, cnt, labels, stats = distributed_msf(
             g, n, mesh, algorithm="boruvka", axis_names=("data",),
             local_preprocessing=pre)
         jax.block_until_ready(mask)
         t1 = time.perf_counter()
         # time a second run (compiled)
         t0 = time.perf_counter()
-        mask, wt, cnt, labels = distributed_msf(
+        mask, wt, cnt, labels, stats = distributed_msf(
             g, n, mesh, algorithm="boruvka", axis_names=("data",),
             local_preprocessing=pre)
         jax.block_until_ready(mask)

@@ -27,12 +27,12 @@ out = {}
 for p in (1, 2, 4, 8):
     mesh = Mesh(np.array(jax.devices())[:p], ("data",))
     g, cap = build_dist_graph(u, v, w, n, p)
-    mask, wt, cnt, _ = distributed_msf(g, n, mesh, algorithm="boruvka",
-                                       axis_names=("data",))
+    mask, wt, cnt, _, _ = distributed_msf(g, n, mesh, algorithm="boruvka",
+                                          axis_names=("data",))
     jax.block_until_ready(mask)
     t0 = time.perf_counter()
-    mask, wt, cnt, _ = distributed_msf(g, n, mesh, algorithm="boruvka",
-                                       axis_names=("data",))
+    mask, wt, cnt, _, _ = distributed_msf(g, n, mesh, algorithm="boruvka",
+                                          axis_names=("data",))
     jax.block_until_ready(mask)
     us = (time.perf_counter() - t0) * 1e6
     out[p] = {"us": us, "cap_per_shard": cap, "mst_edges": int(cnt)}

@@ -53,11 +53,18 @@ def main() -> None:
         jax.block_until_ready(out[0])
         run = time.perf_counter() - t0
         wt, cnt = out[1], out[2]
+        stats = out[-1]  # CommStats, last element for both engines
+        rounds = max(int(stats.rounds), 1)
         ok = abs(float(wt) - expect) < 1e-3 * max(expect, 1.0)
         print(f"  {label:26s} weight={float(wt):14.1f} edges={int(cnt):7d} "
               f"[{'OK' if ok else 'MISMATCH'}] "
               f"first={compile_run:.2f}s steady={run:.3f}s "
               f"({2 * len(u) / run / 1e6:.2f} Medges/s)")
+        print(f"  {'':26s} comm: {int(stats.calls)} collectives over "
+              f"{int(stats.rounds)} rounds "
+              f"({int(stats.calls) / rounds:.1f}/round), "
+              f"{float(stats.items) / 1e3:.1f}k items, "
+              f"{float(stats.bytes) / 1e6:.2f} MB")
 
     for algo in ("boruvka", "filter_boruvka"):
         solve(algo, lambda: distributed_msf(

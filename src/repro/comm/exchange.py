@@ -20,7 +20,7 @@ MoE layers (token->expert dispatch) — one primitive, two workloads.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Sequence, Tuple
+from typing import Callable, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +30,43 @@ from repro import compat
 from repro.comm.grid_alltoall import all_to_all_nd
 
 
+class ExchangeStats(NamedTuple):
+    """Comm accumulator for the routed exchanges (the honest perf metric:
+    on one host, wall time over virtual devices is noise — counting the
+    all-to-alls and the routed volume is what separates engine variants;
+    benchmarks/sharded_scaling.py).
+
+    All three are device-invariant scalars, safe to carry through
+    shard_map loops and to return with out_spec P():
+      * ``calls``  — ``lax.all_to_all`` invocations (grid schedules count
+        one per hop, matching what the interconnect actually executes);
+      * ``items``  — payload items accepted into send buffers, psum'd
+        (what request coalescing / dead-edge retirement shrink);
+      * ``bytes``  — capacity-padded buffer bytes shipped per call,
+        including the validity mask and the grid schedule's volume
+        multiplier (what smaller capacities shrink).  float32 because
+        int32 overflows on benchmark-sized runs.
+    """
+    calls: jax.Array   # [] int32
+    items: jax.Array   # [] float32
+    bytes: jax.Array   # [] float32
+
+    @staticmethod
+    def zeros() -> "ExchangeStats":
+        return ExchangeStats(jnp.int32(0), jnp.float32(0.0), jnp.float32(0.0))
+
+
+def _hops(axis_names: Sequence[str], schedule: str) -> int:
+    """all_to_all invocations one logical exchange costs (grid: one/axis)."""
+    names = tuple(axis_names)
+    return 1 if (schedule == "direct" or len(names) == 1) else len(names)
+
+
+def _buffer_bytes(buffers) -> int:
+    """Bytes one exchange of the (already [p, C, ...]-shaped) buffers ships."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(buffers))
+
+
 class ExchangeResult(NamedTuple):
     recv: jax.Array        # [p, C, ...] received payloads (source-major)
     recv_ok: jax.Array     # [p, C] bool
@@ -37,6 +74,7 @@ class ExchangeResult(NamedTuple):
     dest: jax.Array        # [L] int32 (echoed)
     slot: jax.Array        # [L] int32 position used in the send buffer
     overflow: jax.Array    # [] int32, psum'd across devices
+    stats: Optional[ExchangeStats] = None  # set iff the caller threads one
 
 
 def _group_positions(dest: jax.Array, valid: jax.Array, p: int) -> jax.Array:
@@ -54,11 +92,13 @@ def _group_positions(dest: jax.Array, valid: jax.Array, p: int) -> jax.Array:
 
 def routed_exchange(payload, dest: jax.Array, valid: jax.Array,
                     capacity: int, axis_names: Sequence[str],
-                    schedule: str = "grid") -> ExchangeResult:
+                    schedule: str = "grid",
+                    stats: Optional[ExchangeStats] = None) -> ExchangeResult:
     """Deliver ``payload[i]`` to shard ``dest[i]``; static [p, C] buffers.
 
     ``payload`` is a pytree of [L, ...] arrays.  Must run inside shard_map
-    with all ``axis_names`` present.
+    with all ``axis_names`` present.  When ``stats`` is given, the result's
+    ``stats`` field carries it plus this exchange's contribution.
     """
     names = tuple(axis_names)
     p = 1
@@ -85,14 +125,23 @@ def routed_exchange(payload, dest: jax.Array, valid: jax.Array,
     recv = jax.tree.map(lambda b: all_to_all_nd(b, names, schedule), send)
     recv_ok = all_to_all_nd(send_mask, names, schedule)
     overflow = lax.psum(jnp.sum((valid & ~ok).astype(jnp.int32)), names)
-    return ExchangeResult(recv, recv_ok, ok, dest, pos, overflow)
+    if stats is not None:
+        h = _hops(names, schedule)
+        nbuf = len(jax.tree.leaves(payload)) + 1  # + validity mask
+        by = _buffer_bytes(send) + _buffer_bytes(send_mask)
+        items = lax.psum(jnp.sum(ok.astype(jnp.float32)), names)
+        stats = ExchangeStats(stats.calls + jnp.int32(nbuf * h),
+                              stats.items + items,
+                              stats.bytes + jnp.float32(by * h))
+    return ExchangeResult(recv, recv_ok, ok, dest, pos, overflow, stats)
 
 
 def reply(ex: ExchangeResult, answers, axis_names: Sequence[str],
-          schedule: str = "grid"):
+          schedule: str = "grid", stats: Optional[ExchangeStats] = None):
     """Route per-slot ``answers`` ([p, C, ...], aligned with ``ex.recv``)
     back to the requesting items.  Returns [L, ...] with ``ex.sent_ok``
-    telling which entries are meaningful."""
+    telling which entries are meaningful; with ``stats``, returns
+    ([L, ...], updated stats) instead."""
     names = tuple(axis_names)
     back = jax.tree.map(lambda a: all_to_all_nd(a, names, schedule), answers)
     # item i used buffer position (dest[i], slot[i]); after the return
@@ -102,7 +151,17 @@ def reply(ex: ExchangeResult, answers, axis_names: Sequence[str],
     def gather(b):
         return b[d, ex.slot]
 
-    return jax.tree.map(gather, back)
+    out = jax.tree.map(gather, back)
+    if stats is None:
+        return out
+    h = _hops(names, schedule)
+    by = _buffer_bytes(answers)
+    items = lax.psum(jnp.sum(ex.recv_ok.astype(jnp.float32)), names)
+    nbuf = len(jax.tree.leaves(answers))
+    stats = ExchangeStats(stats.calls + jnp.int32(nbuf * h),
+                          stats.items + items,
+                          stats.bytes + jnp.float32(by * h))
+    return out, stats
 
 
 def request_reply(request, dest: jax.Array, valid: jax.Array,

@@ -29,6 +29,7 @@ Pipeline per the paper's Algorithm 1:
 """
 from __future__ import annotations
 
+import functools
 import math
 from functools import partial
 from typing import NamedTuple, Optional, Sequence, Tuple
@@ -47,6 +48,24 @@ from repro.core.graph import INVALID_W
 # Host-side np constant: a jnp scalar would initialize the backend at
 # import time and lock the device count.
 ESENT = np.int32(2 ** 30)
+
+
+class CommStats(NamedTuple):
+    """Per-solve collective-traffic accounting, shared by both mesh
+    engines (ISSUE 2: comm counters are the honest metric on one host).
+
+    ``calls``/``items``/``bytes`` cover the per-round collectives
+    (MINEDGES / CONTRACT / EXCHANGELABELS and the preprocessing label
+    combine); the two one-off result reductions (weight, count) are
+    excluded.  The replicated engine counts its dense allreduces, the
+    sharded engine counts its routed all-to-alls — same fields, so
+    benchmarks can compare the engines like-for-like.  All four are
+    device-invariant scalars (out_spec P()).
+    """
+    calls: jax.Array   # [] int32 — collective invocations
+    items: jax.Array   # [] f32 — payload items moved (n-vector: n items)
+    bytes: jax.Array   # [] f32 — payload bytes moved
+    rounds: jax.Array  # [] int32 — Borůvka rounds executed
 
 
 class DistGraph(NamedTuple):
@@ -139,12 +158,18 @@ def _local_vertex_mask_for_edges(x: jax.Array, firsts, lasts, shard: int,
     return inside & ~root_mask_at
 
 
-def _local_preprocessing(u, v, w, eid, valid, n: int,
-                         axes: Tuple[str, ...]):
+def _local_preprocessing_core(u, v, w, eid, valid, n: int,
+                              axes: Tuple[str, ...]):
     """Section IV-A: contract local MST edges without communication.
 
-    Returns (labels[n] replicated-consistent, mst_slots[cap] bool).
-    One psum(n) label combine at the end (the ghost-label exchange).
+    Returns this shard's *contribution* (labels[n] deviating from the
+    identity only for vertices contracted on this shard — each vertex is
+    contracted on at most one shard — and mst_slots[cap] bool).  Callers
+    combine contributions their own way: the replicated engine with one
+    dense psum(n) (``_local_preprocessing``), the sharded engine with a
+    routed label scatter to the owners (distributed_sharded.py), which
+    avoids reintroducing the O(n) collective the sharded representation
+    exists to avoid.
     """
     cap = u.shape[0]
     shard = lax.axis_index(axes)
@@ -206,11 +231,23 @@ def _local_preprocessing(u, v, w, eid, valid, n: int,
     labels, mst, _, _ = lax.while_loop(
         cond, lambda s: round_(s),
         (labels0, mst0, _vary(jnp.array(True), axes), jnp.int32(0)))
+    return labels, mst.astype(bool)
+
+
+def _local_preprocessing(u, v, w, eid, valid, n: int,
+                         axes: Tuple[str, ...]):
+    """Replicated combine of the comm-free contraction contributions.
+
+    Returns (labels[n] replicated-consistent, mst_slots[cap] bool).
+    One psum(n) label combine at the end (the ghost-label exchange).
+    """
+    labels, mst = _local_preprocessing_core(u, v, w, eid, valid, n, axes)
+    iota = jnp.arange(n, dtype=jnp.int32)
     # EXCHANGELABELS (dense): each vertex is contracted on at most one
     # shard, so summing the deviations from identity merges all shards'
     # label updates in one allreduce.
     labels = lax.psum(labels - iota, axes) + iota
-    return labels, mst.astype(bool)
+    return labels, mst
 
 
 def _distributed_rounds(u, v, w, eid, valid, labels, mst, n: int,
@@ -265,10 +302,10 @@ def _distributed_rounds(u, v, w, eid, valid, labels, mst, n: int,
     def cond(state):
         return state[2] & (state[3] < max_rounds)
 
-    labels, mst, _, _ = lax.while_loop(
+    labels, mst, _, r = lax.while_loop(
         cond, round_, (labels, _vary(mst, axes), jnp.array(True),
                        jnp.int32(0)))
-    return labels, mst
+    return labels, mst, r
 
 
 def _weight_pivots(w, valid, num_levels: int, axes: Tuple[str, ...]):
@@ -309,8 +346,10 @@ def _distributed_rounds_shrink(u, v, w, eid, valid, labels, mst, n: int,
     cid = iota  # [n] vertex-label -> active slot (or >= s below)
     rep = iota  # [n-sized buffer] slot -> representative vertex label
     s = n
+    acc_items = 0  # static: allreduced items (3 (s+1)-vectors per round)
 
     for r in range(rounds):
+        acc_items += 3 * (s + 1)
         s_next = max((s + 1) // 2, 1)
         pad = jnp.int32(s)  # inactive sentinel slot
         ru = jnp.where(valid, cid[labels[u]], pad)
@@ -373,7 +412,7 @@ def _distributed_rounds_shrink(u, v, w, eid, valid, labels, mst, n: int,
         cid = cid_next
         rep = rep_next
         s = s_next
-    return labels, mst
+    return labels, mst, rounds, acc_items
 
 
 # --------------------------------------------------------------------------
@@ -386,30 +425,58 @@ def _msf_shard_fn(u, v, w, eid, n: int, axes: Tuple[str, ...],
     valid = jnp.isfinite(w)
     iota = jnp.arange(n, dtype=jnp.int32)
     mr = max_rounds or (math.ceil(math.log2(max(n, 2))) + 1)
+    p = 1
+    for a in axes:
+        p *= compat.axis_size(a)
+    # analytic-but-threaded collective accounting (CommStats): the dense
+    # engine's traffic is fully determined by (n, rounds) — 3 allreduced
+    # n-vectors per round (wmin f32, emin i32, other i32)
+    calls = jnp.int32(0)
+    items = jnp.float32(0.0)
+    nbytes = jnp.float32(0.0)
+    rounds = jnp.int32(0)
 
     if local_preprocessing:
         labels, pre_mst = _local_preprocessing(u, v, w, eid, valid, n, axes)
+        # psum(n) label combine + the 2 tiny firsts/lasts all_gathers
+        calls += 3
+        items += jnp.float32(n + 2 * p)
+        nbytes += jnp.float32(4 * (n + 2 * p))
     else:
-        labels, pre_mst = iota, jnp.zeros_like(u, bool) & False
-        pre_mst = jnp.zeros(u.shape, bool)
+        labels, pre_mst = iota, jnp.zeros(u.shape, bool)
 
     mst = jnp.zeros(u.shape, bool)
     if algorithm == "boruvka":
-        labels, mst = _distributed_rounds(u, v, w, eid, valid, labels, mst,
-                                          n, axes, None, mr)
+        labels, mst, r = _distributed_rounds(u, v, w, eid, valid, labels,
+                                             mst, n, axes, None, mr)
+        rounds += r
+        calls += 3 * r
+        items += 3.0 * n * r.astype(jnp.float32)
+        nbytes += 12.0 * n * r.astype(jnp.float32)
     elif algorithm in ("boruvka_shrink", "boruvka_shrink_srconly"):
         mst = _vary(mst, axes)
-        labels, mst = _distributed_rounds_shrink(
+        labels, mst, r, acc = _distributed_rounds_shrink(
             u, v, w, eid, valid, labels, mst, n, axes,
             src_only=algorithm.endswith("srconly"))
+        rounds += r
+        calls += 3 * r
+        items += jnp.float32(acc)
+        nbytes += jnp.float32(4 * acc)
     elif algorithm == "filter_boruvka":
         pivots = _weight_pivots(w, valid, num_levels, axes)
+        calls += 1
+        items += jnp.float32(64 * p)
+        nbytes += jnp.float32(4 * 64 * p)
         lo = jnp.float32(-jnp.inf)
         for lvl in range(num_levels):
             hi = pivots[lvl] if lvl < num_levels - 1 else jnp.float32(jnp.inf)
             active = (w > lo) & (w <= hi)
-            labels, mst = _distributed_rounds(u, v, w, eid, valid, labels,
-                                              mst, n, axes, active, mr)
+            labels, mst, r = _distributed_rounds(u, v, w, eid, valid, labels,
+                                                 mst, n, axes, active, mr)
+            rounds += r
+            calls += 3 * r
+            items += 3.0 * n * r.astype(jnp.float32)
+            nbytes += 12.0 * n * r.astype(jnp.float32)
             lo = hi
     else:
         raise ValueError(algorithm)
@@ -419,10 +486,8 @@ def _msf_shard_fn(u, v, w, eid, n: int, axes: Tuple[str, ...],
     full_mask = mst | pre_mst
     weight = lax.psum(jnp.sum(jnp.where(full_mask, w, 0.0)), axes)
     count = lax.psum(jnp.sum(full_mask.astype(jnp.int32)), axes)
-    return full_mask, weight, count, labels
-
-
-import functools
+    stats = CommStats(calls, items, nbytes, rounds)
+    return full_mask, weight, count, labels, stats
 
 
 @functools.lru_cache(maxsize=64)
@@ -436,7 +501,7 @@ def _build_msf_fn(n: int, mesh: jax.sharding.Mesh, axes: Tuple[str, ...],
     return jax.jit(compat.shard_map(
         fn, mesh=mesh,
         in_specs=(spec, spec, spec, spec),
-        out_specs=(spec, P(), P(), P())))
+        out_specs=(spec, P(), P(), P(), P())))
 
 
 def distributed_msf(graph: DistGraph, n: int, mesh: jax.sharding.Mesh,
@@ -445,11 +510,13 @@ def distributed_msf(graph: DistGraph, n: int, mesh: jax.sharding.Mesh,
                     local_preprocessing: bool = True,
                     num_levels: int = 4,
                     max_rounds: Optional[int] = None):
-    """Run the distributed MSF on a mesh. Returns (mask, weight, count, labels).
+    """Run the distributed MSF on a mesh.
 
-    ``mask`` is aligned with ``graph`` slots (one canonical directed copy
-    per MSF edge marked).  The jitted program is cached per
-    (n, mesh, options) so repeated solves only pay tracing once.
+    Returns (mask, weight, count, labels, stats): ``mask`` is aligned
+    with ``graph`` slots (one canonical directed copy per MSF edge
+    marked); ``stats`` is a ``CommStats`` of the per-round collective
+    traffic.  The jitted program is cached per (n, mesh, options) so
+    repeated solves only pay tracing once.
     """
     axes = tuple(axis_names or mesh.axis_names)
     shard_fn = _build_msf_fn(n, mesh, axes, algorithm, local_preprocessing,

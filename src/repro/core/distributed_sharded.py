@@ -8,30 +8,64 @@ the representation the paper's 65 536-core runs rely on: the label
 vector is **1D-sharded by vertex id** (owner of vertex ``vid`` is shard
 ``vid // vertices_per_shard``) and every label access becomes a routed
 message through the capacity-bounded exchange of ``comm/exchange.py``
-(the XLA-native stand-in for the paper's sparse ``MPI_Alltoallv``):
+(the XLA-native stand-in for the paper's sparse ``MPI_Alltoallv``).
 
+The phases, with the communication-minimisation levers of ISSUE 2 (all
+individually toggleable; EXPERIMENTS.md §Sharded-label engine records
+the measured all-to-all / routed-volume deltas):
+
+  LOCALPREPROCESSING  (``local_preprocessing=True``, Section IV-A)
+             Contract provably-local MST edges comm-free (shared
+             boundary vertices stay roots, same core as the replicated
+             engine), then seed the routed rounds with ONE routed label
+             scatter to the owners — not the dense psum(n) the
+             replicated engine uses, which would reintroduce the O(n)
+             collective this representation exists to avoid.  Edges both
+             of whose endpoints were contracted into the same component
+             are retired into the ``dead`` mask before the first round.
   MINEDGES   Each edge shard looks up the component of both endpoints
-             from the owners (request/reply), scatter-mins locally over
-             *nothing* — instead it ships one ``(component, w, eid,
-             other_component)`` candidate per directed copy to the
-             component's owner, which scatter-mins over its owned slots
-             only.  Winning candidates are confirmed back to the sending
-             edge slot so the canonical (u < v) copy can be marked.
+             from the owners (request/reply).  With ``coalesce=True``
+             the lexicographically sorted edge array is deduplicated
+             first: one request per contiguous equal-endpoint run
+             (segmented-scan run detection shared with kernels/segmin),
+             answers fanned back out locally — lookup volume drops by
+             ~avg-degree and ``lookup_capacity`` shrinks to the
+             host-computed run-head bound.  With ``src_only=True`` each
+             directed copy ships its ``(comp, w, eid, other)`` candidate
+             only to the owner of its *source* component: both directed
+             copies exist, so that owner still sees every edge incident
+             to its components — 1 routed exchange + 1 confirmation
+             instead of 2 + 2.  The owner scatter-mins with the (w, eid)
+             order over its owned slots only.
   CONTRACT   Pointer doubling over the sharded parent array: each
              doubling step is one request_reply round asking
              ``owner(parent[x])`` for ``parent[parent[x]]``
              (EXCHANGELABELS).  The 2-cycle of a pair of components that
-             choose each other is broken toward the smaller id, exactly
-             as in the replicated engine.
+             choose each other is broken toward the smaller id.  With
+             ``adaptive_doubling=True`` the fixed log2(n) schedule
+             becomes a while_loop that stops one step after no parent
+             changes (post round 1 contraction trees are shallow).
   RELABEL    Every owned vertex re-resolves its label through one more
-             lookup of the contracted parent array.
+             lookup of the contracted parent array.  Slots whose
+             endpoints resolve to the same component join the persistent
+             ``dead`` mask and stop generating requests and candidates.
+
+Chosen-edge marking: in src-only mode a mutual pair of components
+necessarily chose the *same* edge (each side's minimum bounds the
+other's), and mutuality is exactly the 2-cycle the contraction already
+detects — so the owner marks a winner iff it is not the larger side of a
+2-cycle, which marks every MSF edge on exactly one directed slot without
+the second confirmation exchange.  In the 2-exchange mode the canonical
+(u < v) copy is marked, as before.  Either way the slot mask marks each
+undirected MSF edge exactly once (the engines' shared contract).
 
 Per-shard label memory is O(n/p) instead of O(n); all exchanges are
 capacity-bounded with explicit overflow accounting (never silent): with
 the default capacities (``edge_capacity = edges/shard``,
-``label_capacity = vertices/shard``) overflow is impossible and results
-are exact; undersized capacities report a positive overflow count and
-the caller must retry larger (EXPERIMENTS.md §Sharded-label engine).
+``label_capacity = vertices/shard``, ``lookup_capacity`` = the exact
+host-side run-head bound) overflow is impossible and results are exact;
+undersized capacities report a positive overflow count and the caller
+must retry larger (EXPERIMENTS.md §Sharded-label engine).
 
 Tie-breaking is the direction-independent ``(w, eid)`` order shared by
 all engines and the Kruskal oracle, so the produced MSF edge set is
@@ -46,13 +80,17 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.comm.exchange import reply, routed_exchange
-from repro.core.distributed import (ESENT, DistGraph, _doubling_iters,
+from repro.comm.exchange import ExchangeStats, reply, routed_exchange
+from repro.core.distributed import (ESENT, CommStats, DistGraph,
+                                    _doubling_iters,
+                                    _local_preprocessing_core,
                                     _weight_pivots)
+from repro.kernels.segmin.ops import run_metadata
 
 
 # --------------------------------------------------------------------------
@@ -61,7 +99,8 @@ from repro.core.distributed import (ESENT, DistGraph, _doubling_iters,
 
 def _sharded_lookup(table: jax.Array, vids: jax.Array, valid: jax.Array,
                     vps: int, capacity: int, axes: Tuple[str, ...],
-                    schedule: str = "grid"):
+                    schedule: str = "grid",
+                    stats: Optional[ExchangeStats] = None):
     """Resolve ``table[vids[i]]`` where ``table`` is 1D-sharded by id.
 
     ``table`` is this shard's [vps] slice of a global [p * vps] int32
@@ -69,20 +108,114 @@ def _sharded_lookup(table: jax.Array, vids: jax.Array, valid: jax.Array,
     the id itself, the owner answers ``table[id - base]``, the answer is
     routed back to the requesting slot (the paper's request/reply label
     exchange).  Returns (values [L], ok [L], overflow) — entries with
-    ``ok`` False overflowed the exchange and carry garbage.
+    ``ok`` False overflowed the exchange and carry garbage; with
+    ``stats`` the updated accumulator is appended to the tuple.
     """
     names = tuple(axes)
     base = lax.axis_index(names) * vps
-    ex = routed_exchange(vids, vids // vps, valid, capacity, names, schedule)
+    ex = routed_exchange(vids, vids // vps, valid, capacity, names,
+                         schedule, stats=stats)
     off = jnp.clip(ex.recv - base, 0, vps - 1)
     answers = jnp.where(ex.recv_ok, table[off], jnp.int32(-1))
-    out = reply(ex, answers, names, schedule)
-    return out, ex.sent_ok, ex.overflow
+    if stats is None:
+        out = reply(ex, answers, names, schedule)
+        return out, ex.sent_ok, ex.overflow
+    out, st = reply(ex, answers, names, schedule, stats=ex.stats)
+    return out, ex.sent_ok, ex.overflow, st
+
+
+def _coalesced_lookup(table: jax.Array, vids: jax.Array, runs,
+                      valid: jax.Array, vps: int, capacity: int,
+                      axes: Tuple[str, ...], schedule: str,
+                      stats: ExchangeStats):
+    """``_sharded_lookup`` with request coalescing over equal-vid runs.
+
+    The edge array is lexicographically sorted, so consecutive slots
+    request the same vertex ~avg-degree times.  ``runs`` is the
+    precomputed ``run_metadata(vids)`` (static across rounds): only run
+    heads whose run contains at least one valid slot send a request, and
+    the reply fans back out locally through the head index.  Divides
+    routed lookup items by the average run length and lets ``capacity``
+    shrink to the run-head bound (``default_lookup_capacity``), with the
+    same exact overflow accounting — a dropped head drops its whole run,
+    reported through ``overflow``/``ok``.
+    """
+    names = tuple(axes)
+    head, head_idx, run_id = runs
+    any_valid = compat.vary(jnp.zeros(valid.shape, bool), names
+                            ).at[run_id].max(valid)
+    req = head & any_valid[run_id]
+    base = lax.axis_index(names) * vps
+    ex = routed_exchange(vids, vids // vps, req, capacity, names,
+                         schedule, stats=stats)
+    off = jnp.clip(ex.recv - base, 0, vps - 1)
+    answers = jnp.where(ex.recv_ok, table[off], jnp.int32(-1))
+    out_h, st = reply(ex, answers, names, schedule, stats=ex.stats)
+    return out_h[head_idx], valid & ex.sent_ok[head_idx], ex.overflow, st
+
+
+def _sharded_preprocess(u, v, w, eid, valid, n: int, vps: int,
+                        capacity: int, axes: Tuple[str, ...],
+                        schedule: str, stats: ExchangeStats):
+    """Sharded LOCALPREPROCESSING (Section IV-A + ISSUE 2 lever 1).
+
+    Runs the comm-free local contraction, then seeds the sharded label
+    vector with ONE routed scatter of the changed (vid, root) pairs to
+    the owners — each vertex is contracted on at most one shard, so the
+    owner-side scatter has no conflicts.  Also returns the initial
+    ``dead`` slot mask: edges whose endpoints contracted into the same
+    local component can never be MSF candidates again.
+
+    Returns (lab [vps], pre_mst [cap] bool, dead0 [cap] bool, overflow,
+    stats).  Capacity ``label_capacity`` is overflow-free by
+    construction: an owner owns ``vps`` vertices, so no sender can have
+    more than ``vps`` changed labels for it.
+    """
+    names = tuple(axes)
+    loc_labels, pre_mst = _local_preprocessing_core(u, v, w, eid, valid,
+                                                    n, names)
+    iota_n = jnp.arange(n, dtype=jnp.int32)
+    changed = loc_labels != iota_n
+    ex = routed_exchange((compat.vary(iota_n, names), loc_labels),
+                         iota_n // vps, changed, capacity, names,
+                         schedule, stats=stats)
+    base = lax.axis_index(names) * vps
+    vid = base + jnp.arange(vps, dtype=jnp.int32)
+    rvid = ex.recv[0].reshape(-1)
+    rlab = ex.recv[1].reshape(-1)
+    ok = ex.recv_ok.reshape(-1)
+    off = jnp.where(ok, rvid - base, vps)  # vps = drop row
+    lab = jnp.concatenate([vid, jnp.full((1,), -1, jnp.int32)]
+                          ).at[off].set(rlab)[:vps]
+    dead0 = loc_labels[u] == loc_labels[v]  # includes self-loops u == v
+    return lab, pre_mst, dead0, ex.overflow, ex.stats
+
+
+def _owner_scatter_min(comp, wc, ec, oc, okc, base, vps: int):
+    """Owner-side (w, eid)-ordered scatter-min over owned component slots.
+
+    Shared by both MINEDGES variants so the tie-break discipline cannot
+    diverge between them.  ``comp/wc/ec/oc/okc`` are the flat received
+    candidates; slot ``vps`` is the drop row for unused buffer entries.
+    Returns (has [vps], other [vps], is_win [flat], off [flat]).
+    """
+    off = jnp.where(okc, comp - base, vps)
+    wmin = jnp.full((vps + 1,), jnp.inf, wc.dtype).at[off].min(
+        jnp.where(okc, wc, jnp.inf))
+    at_min = okc & (wc == wmin[off])
+    emin = jnp.full((vps + 1,), ESENT, jnp.int32).at[off].min(
+        jnp.where(at_min, ec, ESENT))
+    is_win = at_min & (ec == emin[off])
+    other = jnp.full((vps + 1,), -1, jnp.int32).at[off].max(
+        jnp.where(is_win, oc, -1))
+    has = emin[:vps] < ESENT
+    return has, other[:vps], is_win, off
 
 
 def _sharded_minedges(ru, rv, wk, eid, alive, vps: int, capacity: int,
-                      axes: Tuple[str, ...], schedule: str = "grid"):
-    """Owner-computes MINEDGES over sharded component slots.
+                      axes: Tuple[str, ...], schedule: str,
+                      stats: ExchangeStats):
+    """Owner-computes MINEDGES, 2-exchange variant (the PR 1 baseline).
 
     Each *directed* edge copy ships a ``(comp, w, eid, other)`` candidate
     to the owner of both its source component (keyed ``ru``) and its
@@ -91,14 +224,14 @@ def _sharded_minedges(ru, rv, wk, eid, alive, vps: int, capacity: int,
     the (w, eid) order over its [vps] slots and confirms winners back to
     the submitting slot, so the caller can mark the canonical copy.
 
-    Returns (has [vps], other [vps], win [L], overflow).
+    Returns (has [vps], other [vps], win [L], overflow, stats).
     """
     names = tuple(axes)
     base = lax.axis_index(names) * vps
     ex_u = routed_exchange((ru, wk, eid, rv), ru // vps, alive, capacity,
-                           names, schedule)
+                           names, schedule, stats=stats)
     ex_v = routed_exchange((rv, wk, eid, ru), rv // vps, alive, capacity,
-                           names, schedule)
+                           names, schedule, stats=ex_u.stats)
 
     def flat(ex):
         comp, w_, e_, o_ = ex.recv
@@ -112,99 +245,181 @@ def _sharded_minedges(ru, rv, wk, eid, alive, vps: int, capacity: int,
     ec = jnp.concatenate([eu, ev])
     oc = jnp.concatenate([ou, ov])
     okc = jnp.concatenate([oku, okv])
-    # slot vps is the drop row for unused buffer entries
-    off = jnp.where(okc, comp - base, vps)
-    wmin = jnp.full((vps + 1,), jnp.inf, wc.dtype).at[off].min(
-        jnp.where(okc, wc, jnp.inf))
-    at_min = okc & (wc == wmin[off])
-    emin = jnp.full((vps + 1,), ESENT, jnp.int32).at[off].min(
-        jnp.where(at_min, ec, ESENT))
-    is_win = at_min & (ec == emin[off])
-    other = jnp.full((vps + 1,), -1, jnp.int32).at[off].max(
-        jnp.where(is_win, oc, -1))
-    has = emin[:vps] < ESENT
+    has, other, is_win, _ = _owner_scatter_min(comp, wc, ec, oc, okc,
+                                               base, vps)
     # confirm winners to the submitting slots (both exchanges carry the
     # same (w, eid) for the two copies of an undirected edge, so a slot
     # wins iff either of its endpoint components chose it)
     nu = ku.shape[0]
-    win_u = reply(ex_u, is_win[:nu].reshape(ex_u.recv_ok.shape), names,
-                  schedule)
-    win_v = reply(ex_v, is_win[nu:].reshape(ex_v.recv_ok.shape), names,
-                  schedule)
+    win_u, st = reply(ex_u, is_win[:nu].reshape(ex_u.recv_ok.shape), names,
+                      schedule, stats=ex_v.stats)
+    win_v, st = reply(ex_v, is_win[nu:].reshape(ex_v.recv_ok.shape), names,
+                      schedule, stats=st)
     win = (win_u & ex_u.sent_ok) | (win_v & ex_v.sent_ok)
-    return has, other[:vps], win, ex_u.overflow + ex_v.overflow
+    return has, other, win, ex_u.overflow + ex_v.overflow, st
+
+
+def _sharded_minedges_src(ru, rv, wk, eid, alive, vps: int, capacity: int,
+                          axes: Tuple[str, ...], schedule: str,
+                          stats: ExchangeStats):
+    """Owner-computes MINEDGES, src-only variant (ISSUE 2 lever 3).
+
+    Both directed copies of every edge are present, so the owner of
+    component ``c`` already receives every edge incident to ``c``
+    through the ``ru``-keyed exchange alone (the invariant
+    ``boruvka_shrink_srconly`` exploits in the replicated engine): the
+    ``rv``-keyed exchange is dropped, halving MINEDGES to 1 routed
+    exchange + 1 confirmation.  The confirmation is deferred — the
+    caller replies through the returned ``ex`` once the contraction's
+    first lookup has revealed which winners are the larger side of a
+    2-cycle (see module docstring: exact-once marking).
+
+    Returns (has [vps], other [vps], is_win [p*C] flat, off [p*C] flat
+    owner slot per candidate, ex).
+    """
+    names = tuple(axes)
+    base = lax.axis_index(names) * vps
+    ex = routed_exchange((ru, wk, eid, rv), ru // vps, alive, capacity,
+                         names, schedule, stats=stats)
+    comp, w_, e_, o_ = (x.reshape(-1) for x in ex.recv)
+    okc = ex.recv_ok.reshape(-1)
+    has, other, is_win, off = _owner_scatter_min(comp, w_, e_, o_, okc,
+                                                 base, vps)
+    return has, other, is_win, off, ex
 
 
 def _sharded_contract(has, other, n: int, vps: int, capacity: int,
-                      axes: Tuple[str, ...], schedule: str = "grid"):
+                      axes: Tuple[str, ...], schedule: str,
+                      adaptive: bool, stats: ExchangeStats):
     """Pointer doubling over the sharded parent array (request/reply).
 
     Every owned slot is a potential component root: roots with a chosen
     edge point at the other endpoint's component, everything else at
     itself.  The 2-cycle of mutually chosen components keeps the smaller
-    id as root; then log2(n) doubling rounds, each one routed lookup.
-    Returns (parent [vps] fully contracted, overflow).
+    id as root; then doubling rounds of one routed lookup each — a fixed
+    log2(n) schedule, or (``adaptive``) a while_loop that stops one step
+    after a psum reports no parent changed, which post round 1 cuts the
+    schedule to the actual tree depth.  The iteration cap stays at
+    log2(n) either way, so undersized capacities (garbage answers) can
+    not loop forever.
+
+    Returns (parent [vps] fully contracted, keep [vps] — exact-once
+    owner-side marking decision for src-only MINEDGES (winner and not
+    the larger side of a 2-cycle), overflow, stats).
     """
     names = tuple(axes)
     base = lax.axis_index(names) * vps
     vid = base + jnp.arange(vps, dtype=jnp.int32)
     ones = compat.vary(jnp.ones((vps,), bool), names)
-    parent = jnp.where(has, other, vid)
-    gp, _, ov0 = _sharded_lookup(parent, parent, ones, vps, capacity,
-                                 names, schedule)
-    parent = jnp.where((gp == vid) & (vid < parent), vid, parent)
+    parent0 = jnp.where(has, other, vid)
+    gp, _, ov0, stats = _sharded_lookup(parent0, parent0, ones, vps,
+                                        capacity, names, schedule,
+                                        stats=stats)
+    # a 2-cycle (mutually chosen components) necessarily chose the SAME
+    # edge — each side's minimum bounds the other's — so `keep` marks
+    # every winning (component, edge) pair on exactly one owner
+    mutual = gp == vid
+    keep = has & (~mutual | (vid < parent0))
+    parent = jnp.where(mutual & (vid < parent0), vid, parent0)
+    iters = _doubling_iters(n)
 
-    def dbl(_, carry):
-        par, ov = carry
-        nxt, _, o = _sharded_lookup(par, par, ones, vps, capacity, names,
-                                    schedule)
-        return nxt, ov + o
+    if adaptive:
+        def dbl_a(carry):
+            par, ov, st, i, _ = carry
+            nxt, _, o, st = _sharded_lookup(par, par, ones, vps, capacity,
+                                            names, schedule, stats=st)
+            chg = lax.psum(jnp.sum((nxt != par).astype(jnp.int32)),
+                           names) > 0
+            return nxt, ov + o, st, i + 1, chg
 
-    parent, ov = lax.fori_loop(0, _doubling_iters(n), dbl, (parent, ov0))
-    return parent, ov
+        def cond(carry):
+            return carry[4] & (carry[3] < iters)
+
+        parent, ov, stats, _, _ = lax.while_loop(
+            cond, dbl_a,
+            (parent, ov0, stats, jnp.int32(0), jnp.array(True)))
+    else:
+        def dbl(_, carry):
+            par, ov, st = carry
+            nxt, _, o, st = _sharded_lookup(par, par, ones, vps, capacity,
+                                            names, schedule, stats=st)
+            return nxt, ov + o, st
+
+        parent, ov, stats = lax.fori_loop(0, iters, dbl,
+                                          (parent, ov0, stats))
+    return parent, keep, ov, stats
 
 
-def _sharded_rounds(u, v, w, eid, valid, lab, mst, n: int, vps: int,
+def _sharded_rounds(u, v, w, eid, valid, lab, mst, dead, n: int, vps: int,
                     axes: Tuple[str, ...], active: Optional[jax.Array],
                     max_rounds: int, cap_edge: int, cap_label: int,
-                    overflow, schedule: str = "grid"):
+                    cap_lookup: int, overflow, stats: ExchangeStats,
+                    rounds, schedule: str, coalesce: bool, src_only: bool,
+                    adaptive: bool):
     """Borůvka rounds with 1D-sharded labels.
 
-    ``active`` optionally restricts the edge set (the filter levels).
-    The loop carry is (lab [vps], mst [cap], go, round, overflow).
+    ``active`` optionally restricts the edge set (the filter levels);
+    ``dead`` persists across rounds AND levels (once ``ru == rv`` a slot
+    is dead forever — labels only coarsen).  The loop carry is
+    (lab [vps], mst [cap], dead [cap], go, round, overflow, stats).
     """
     names = tuple(axes)
-    live = valid if active is None else (valid & active)
+    live0 = valid if active is None else (valid & active)
+    # run structure of the endpoint arrays is static across rounds
+    runs_u = run_metadata(u) if coalesce else None
+    runs_v = run_metadata(v) if coalesce else None
+
+    def lookup_ep(table, runs, vids, live, st):
+        if coalesce:
+            return _coalesced_lookup(table, vids, runs, live, vps,
+                                     cap_lookup, names, schedule, st)
+        return _sharded_lookup(table, vids, live, vps, cap_lookup,
+                               names, schedule, stats=st)
 
     def round_(state):
-        lab, mst, _, r, ovf = state
-        ru, ok_u, o1 = _sharded_lookup(lab, u, live, vps, cap_edge, names,
-                                       schedule)
-        rv, ok_v, o2 = _sharded_lookup(lab, v, live, vps, cap_edge, names,
-                                       schedule)
-        alive = ok_u & ok_v & (ru != rv) & live
+        lab, mst, dead, _, r, ovf, st = state
+        live = live0 & ~dead
+        ru, ok_u, o1, st = lookup_ep(lab, runs_u, u, live, st)
+        rv, ok_v, o2, st = lookup_ep(lab, runs_v, v, live, st)
+        looked = ok_u & ok_v
+        # dead-edge retirement: same component now => same forever
+        dead = dead | (looked & (ru == rv))
+        alive = looked & (ru != rv) & live
         wk = jnp.where(alive, w, jnp.inf)
-        has, other, win, o3 = _sharded_minedges(ru, rv, wk, eid, alive,
-                                                vps, cap_edge, names,
-                                                schedule)
-        # each undirected MSF edge is confirmed on both directed copies;
-        # mark only the canonical one so the global mask is exact-once
-        mst = mst | (win & (u < v))
-        parent, o4 = _sharded_contract(has, other, n, vps, cap_label,
-                                       names, schedule)
-        lab, _, o5 = _sharded_lookup(
+        if src_only:
+            has, other, is_win, off, ex = _sharded_minedges_src(
+                ru, rv, wk, eid, alive, vps, cap_edge, names, schedule, st)
+            parent, keep, o4, st = _sharded_contract(
+                has, other, n, vps, cap_label, names, schedule, adaptive,
+                ex.stats)
+            keep_ext = jnp.concatenate([keep, jnp.zeros((1,), bool)])
+            confirm = (is_win & keep_ext[off]).reshape(ex.recv_ok.shape)
+            win, st = reply(ex, confirm, names, schedule, stats=st)
+            # owner-side dedup => exactly one directed slot per MSF edge
+            mst = mst | (win & ex.sent_ok)
+            o3 = ex.overflow
+        else:
+            has, other, win, o3, st = _sharded_minedges(
+                ru, rv, wk, eid, alive, vps, cap_edge, names, schedule, st)
+            # both directed copies are confirmed; mark only the canonical
+            # one so the global mask is exact-once
+            mst = mst | (win & (u < v))
+            parent, _, o4, st = _sharded_contract(
+                has, other, n, vps, cap_label, names, schedule, adaptive,
+                st)
+        lab, _, o5, st = _sharded_lookup(
             parent, lab, compat.vary(jnp.ones((vps,), bool), names), vps,
-            cap_label, names, schedule)
+            cap_label, names, schedule, stats=st)
         go = lax.psum(jnp.sum(has.astype(jnp.int32)), names) > 0
-        return lab, mst, go, r + 1, ovf + o1 + o2 + o3 + o4 + o5
+        return lab, mst, dead, go, r + 1, ovf + o1 + o2 + o3 + o4 + o5, st
 
     def cond(state):
-        return state[2] & (state[3] < max_rounds)
+        return state[3] & (state[4] < max_rounds)
 
-    lab, mst, _, _, overflow = lax.while_loop(
+    lab, mst, dead, _, r, overflow, stats = lax.while_loop(
         cond, round_,
-        (lab, mst, jnp.array(True), jnp.int32(0), overflow))
-    return lab, mst, overflow
+        (lab, mst, dead, jnp.array(True), jnp.int32(0), overflow, stats))
+    return lab, mst, dead, overflow, stats, rounds + r
 
 
 # --------------------------------------------------------------------------
@@ -214,58 +429,108 @@ def _sharded_rounds(u, v, w, eid, valid, lab, mst, n: int, vps: int,
 def _sharded_shard_fn(u, v, w, eid, n: int, vps: int,
                       axes: Tuple[str, ...], algorithm: str,
                       num_levels: int, max_rounds: Optional[int],
-                      cap_edge: int, cap_label: int, schedule: str):
+                      cap_edge: int, cap_label: int, cap_lookup: int,
+                      schedule: str, local_preprocessing: bool,
+                      coalesce: bool, src_only: bool, adaptive: bool):
     names = tuple(axes)
     valid = jnp.isfinite(w)
     base = lax.axis_index(names) * vps
     lab = base + jnp.arange(vps, dtype=jnp.int32)
     mst = compat.vary(jnp.zeros(u.shape, bool), names)
-    # psum outputs are axis-invariant, so the overflow accumulator (and
-    # the loop's ``go`` flag) stay unvarying on both JAX generations
+    # psum outputs are axis-invariant, so the overflow accumulator, the
+    # comm counters and the loop's ``go`` flag stay unvarying on both
+    # JAX generations
     overflow = jnp.int32(0)
+    stats = ExchangeStats.zeros()
+    rounds = jnp.int32(0)
     mr = (math.ceil(math.log2(max(n, 2))) + 1) if max_rounds is None \
         else max_rounds
 
+    if local_preprocessing:
+        lab, pre_mst, dead, ovf, stats = _sharded_preprocess(
+            u, v, w, eid, valid, n, vps, cap_label, names, schedule, stats)
+        overflow += ovf
+    else:
+        pre_mst = compat.vary(jnp.zeros(u.shape, bool), names)
+        dead = u == v  # self-loops can never be MSF candidates
+
+    common = dict(n=n, vps=vps, axes=names, max_rounds=mr,
+                  cap_edge=cap_edge, cap_label=cap_label,
+                  cap_lookup=cap_lookup, schedule=schedule,
+                  coalesce=coalesce, src_only=src_only, adaptive=adaptive)
     if algorithm == "boruvka":
-        lab, mst, overflow = _sharded_rounds(
-            u, v, w, eid, valid, lab, mst, n, vps, names, None, mr,
-            cap_edge, cap_label, overflow, schedule)
+        lab, mst, dead, overflow, stats, rounds = _sharded_rounds(
+            u, v, w, eid, valid, lab, mst, dead, active=None,
+            overflow=overflow, stats=stats, rounds=rounds, **common)
     elif algorithm == "filter_boruvka":
         pivots = _weight_pivots(w, valid, num_levels, names)
         lo = jnp.float32(-jnp.inf)
         for lvl in range(num_levels):
             hi = pivots[lvl] if lvl < num_levels - 1 else jnp.float32(jnp.inf)
             active = (w > lo) & (w <= hi)
-            lab, mst, overflow = _sharded_rounds(
-                u, v, w, eid, valid, lab, mst, n, vps, names, active, mr,
-                cap_edge, cap_label, overflow, schedule)
+            lab, mst, dead, overflow, stats, rounds = _sharded_rounds(
+                u, v, w, eid, valid, lab, mst, dead, active=active,
+                overflow=overflow, stats=stats, rounds=rounds, **common)
             lo = hi
     else:
         raise ValueError(algorithm)
 
-    weight = lax.psum(jnp.sum(jnp.where(mst, w, 0.0)), names)
-    count = lax.psum(jnp.sum(mst.astype(jnp.int32)), names)
-    return mst, weight, count, lab, overflow
+    full_mask = mst | pre_mst
+    weight = lax.psum(jnp.sum(jnp.where(full_mask, w, 0.0)), names)
+    count = lax.psum(jnp.sum(full_mask.astype(jnp.int32)), names)
+    comm = CommStats(stats.calls, stats.items, stats.bytes, rounds)
+    return full_mask, weight, count, lab, overflow, comm
 
 
 @functools.lru_cache(maxsize=64)
 def _build_sharded_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
                       axes: Tuple[str, ...], algorithm: str,
                       num_levels: int, max_rounds: Optional[int],
-                      cap_edge: int, cap_label: int, schedule: str):
+                      cap_edge: int, cap_label: int, cap_lookup: int,
+                      schedule: str, local_preprocessing: bool,
+                      coalesce: bool, src_only: bool, adaptive: bool):
     fn = partial(_sharded_shard_fn, n=n, vps=vps, axes=axes,
                  algorithm=algorithm, num_levels=num_levels,
                  max_rounds=max_rounds, cap_edge=cap_edge,
-                 cap_label=cap_label, schedule=schedule)
+                 cap_label=cap_label, cap_lookup=cap_lookup,
+                 schedule=schedule,
+                 local_preprocessing=local_preprocessing,
+                 coalesce=coalesce, src_only=src_only, adaptive=adaptive)
     spec = P(axes)
     return jax.jit(compat.shard_map(
         fn, mesh=mesh,
         in_specs=(spec, spec, spec, spec),
-        out_specs=(spec, P(), P(), spec, P())))
+        out_specs=(spec, P(), P(), spec, P(), P())))
 
 
 def vertices_per_shard(n: int, num_shards: int) -> int:
     return max(1, -(-n // num_shards))
+
+
+def default_lookup_capacity(graph: DistGraph, num_shards: int,
+                            n: int) -> int:
+    """Exact-by-construction capacity for the coalesced endpoint lookups.
+
+    One host-side pass over the (already host-built) edge arrays counts,
+    per (shard, owner) pair, the contiguous equal-value runs of each
+    endpoint array — the maximum possible number of coalesced requests
+    any shard sends any owner.  Typically ~edges/(shard·avg_degree)
+    instead of edges/shard, which shrinks the [p, C] lookup buffers by
+    the same factor the coalescing shrinks the routed volume.
+    """
+    vps = vertices_per_shard(n, num_shards)
+    cap = graph.cap_total // num_shards
+    mx = 1
+    for arr in (graph.u, graph.v):
+        a = np.asarray(arr).reshape(num_shards, cap)
+        head = np.ones((num_shards, cap), bool)
+        head[:, 1:] = a[:, 1:] != a[:, :-1]
+        dest = a // vps
+        for s in range(num_shards):
+            d = dest[s][head[s]]
+            if d.size:
+                mx = max(mx, int(np.bincount(d).max()))
+    return mx
 
 
 def distributed_sharded_msf(graph: DistGraph, n: int,
@@ -276,18 +541,31 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
                             max_rounds: Optional[int] = None,
                             edge_capacity: Optional[int] = None,
                             label_capacity: Optional[int] = None,
-                            schedule: str = "grid"):
+                            lookup_capacity: Optional[int] = None,
+                            schedule: str = "grid",
+                            local_preprocessing: bool = True,
+                            coalesce: bool = True,
+                            src_only: bool = True,
+                            adaptive_doubling: bool = True):
     """Run the sharded-label distributed MSF on a mesh.
 
-    Returns (mask, weight, count, labels, overflow):
-      * ``mask`` is aligned with ``graph`` slots, one canonical directed
-        copy per MSF edge;
+    Returns (mask, weight, count, labels, overflow, stats):
+      * ``mask`` is aligned with ``graph`` slots, exactly one directed
+        copy per MSF edge (the canonical u < v copy when
+        ``src_only=False``);
       * ``labels`` is the *sharded* label vector laid out shard-major
         ([p * vertices_per_shard], slice [:n] for the per-vertex view);
       * ``overflow`` counts exchange items that exceeded capacity summed
         over all rounds — results are exact iff it is 0 (guaranteed with
         the default capacities); callers passing smaller capacities must
-        retry larger on a positive count.
+        retry larger on a positive count;
+      * ``stats`` is a ``CommStats`` (all-to-all invocations, routed
+        items, buffer bytes, rounds) — the honest comm metric the
+        optimization flags move (benchmarks/sharded_scaling.py).
+
+    The flags default to the optimized engine; passing
+    ``local_preprocessing=False, coalesce=False, src_only=False,
+    adaptive_doubling=False`` reproduces the PR 1 baseline exactly.
     """
     axes = tuple(axis_names or mesh.axis_names)
     p = 1
@@ -299,8 +577,18 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
     # yields all-overflow results, which the overflow count reports
     ce = int(cap if edge_capacity is None else edge_capacity)
     cl = int(vps if label_capacity is None else label_capacity)
+    if lookup_capacity is None:
+        # the exact host-side bound needs concrete edge arrays; under AOT
+        # lowering (make_sharded_mst_step) fall back to the safe bound
+        concrete = not isinstance(graph.u, jax.core.Tracer)
+        lk = default_lookup_capacity(graph, p, n) if (coalesce and concrete) \
+            else ce
+    else:
+        lk = int(lookup_capacity)
     shard_fn = _build_sharded_fn(n, vps, mesh, axes, algorithm, num_levels,
-                                 max_rounds, ce, cl, schedule)
+                                 max_rounds, ce, cl, lk, schedule,
+                                 local_preprocessing, coalesce, src_only,
+                                 adaptive_doubling)
     return shard_fn(graph.u, graph.v, graph.w, graph.eid)
 
 

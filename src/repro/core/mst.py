@@ -51,6 +51,8 @@ def _distributed_dispatch(edges: EdgeList, mesh: jax.sharding.Mesh,
     run = (distributed_msf if engine == "distributed"
            else distributed_sharded_msf)
     res = run(g, edges.n, mesh, algorithm=algorithm, **kw)
+    # res: (mask, weight, count, labels, stats) for distributed, plus an
+    # overflow count at [4] (stats moves to [5]) for distributed_sharded
     mask_slots = np.asarray(res[0])
     if engine == "distributed_sharded":
         overflow = int(res[4])

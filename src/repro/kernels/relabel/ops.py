@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 
@@ -14,8 +14,9 @@ from repro.kernels.relabel.relabel import relabel as relabel_pallas
                                              "use_pallas"))
 def relabel_edges(u: jax.Array, v: jax.Array, w: jax.Array,
                   labels: jax.Array, *, block: int = 512,
-                  interpret: bool = True, use_pallas: bool = True
+                  interpret: Optional[bool] = None, use_pallas: bool = True
                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """``interpret=None`` resolves backend-aware (compiled on TPU only)."""
     if use_pallas:
         return relabel_pallas(u, v, w, labels, block=block,
                               interpret=interpret)

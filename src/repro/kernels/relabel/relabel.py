@@ -19,11 +19,13 @@ array BlockSpec so Mosaic keeps it resident across grid steps.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.segmin.segmin import default_interpret
 
 
 def _relabel_kernel(u_ref, v_ref, w_ref, lab_ref, ru_ref, rv_ref, wp_ref):
@@ -41,9 +43,12 @@ def _relabel_kernel(u_ref, v_ref, w_ref, lab_ref, ru_ref, rv_ref, wp_ref):
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def relabel(u: jax.Array, v: jax.Array, w: jax.Array, labels: jax.Array,
-            *, block: int = 512, interpret: bool = True
+            *, block: int = 512, interpret: Optional[bool] = None
             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Fused relabel. Returns (ru, rv, w') with self-loops at +inf."""
+    """Fused relabel. Returns (ru, rv, w') with self-loops at +inf.
+    ``interpret=None`` resolves backend-aware (compiled on TPU only)."""
+    if interpret is None:
+        interpret = default_interpret()
     m = u.shape[0]
     n = labels.shape[0]
     block = min(block, max(m, 8))

@@ -1,28 +1,60 @@
-"""Jitted public wrapper: dense per-vertex min edges via the segmin kernel."""
+"""Jitted public wrappers around the segmented-scan machinery.
+
+``min_edges_dense`` is the dense per-vertex min-edge entry point (the
+segmin kernel's phase 2).  ``run_metadata`` exposes the same
+contiguous-run discipline the kernel's Hillis-Steele scan exploits as a
+standalone jnp primitive: the sharded-label engine uses it to coalesce
+label-lookup requests (one routed request per distinct source vertex
+instead of one per edge slot — EXPERIMENTS.md §Sharded-label engine).
+"""
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.kernels.segmin.ref import (EID_SENTINEL, dense_min_from_candidates,
                                       segmin_candidates_ref)
-from repro.kernels.segmin.segmin import segmin_candidates
+from repro.kernels.segmin.segmin import default_interpret, segmin_candidates
+
+
+def run_metadata(values: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Contiguous equal-value run structure of ``values`` ([L]).
+
+    Returns (head [L] bool — first slot of its run, head_idx [L] int32 —
+    index of each slot's run head, run_id [L] int32 — dense run number).
+    ``cummax``/``cumsum`` are the log-depth Hillis-Steele scans the segmin
+    kernel runs block-wise; here they run array-wide because the result
+    feeds a routed exchange, not a VMEM-resident reduction.  Pure
+    shape-of-``values`` metadata: compute it once per edge array and
+    reuse across rounds.
+    """
+    L = values.shape[0]
+    idx = jnp.arange(L, dtype=jnp.int32)
+    head = jnp.concatenate([jnp.ones((1,), bool),
+                            values[1:] != values[:-1]])
+    head_idx = lax.cummax(jnp.where(head, idx, jnp.int32(0)))
+    run_id = jnp.cumsum(head.astype(jnp.int32)) - 1
+    return head, head_idx, run_id
 
 
 @functools.partial(jax.jit,
                    static_argnames=("n", "block", "interpret", "use_pallas"))
 def min_edges_dense(seg: jax.Array, w: jax.Array, eid: jax.Array,
                     alive: jax.Array, n: int, *, block: int = 512,
-                    interpret: bool = True, use_pallas: bool = True
+                    interpret: Optional[bool] = None, use_pallas: bool = True
                     ) -> Tuple[jax.Array, jax.Array]:
     """Per-vertex (min weight, argmin eid) over contiguous-run edges.
 
     Two-phase: Pallas block-segmented scan -> tiny scatter-min combine.
     ``use_pallas=False`` routes through the pure-jnp oracle (same
     contract), which is what the CPU test/bench path uses by default.
+    ``interpret=None`` resolves backend-aware (compiled on TPU,
+    interpreted elsewhere).
     """
     if use_pallas:
         cw, ce = segmin_candidates(seg, w, eid, alive, block=block,

@@ -31,12 +31,19 @@ total order that keeps Borůvka cycle-free under ties.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 EID_SENTINEL = 2 ** 30
+
+
+def default_interpret() -> bool:
+    """Backend-aware Pallas mode: compile on the TPU the kernels target,
+    interpret everywhere else (CPU tests/benches, GPU fallback)."""
+    return jax.default_backend() != "tpu"
 
 
 def _segmin_kernel(seg_ref, w_ref, eid_ref, alive_ref, cw_ref, ce_ref,
@@ -80,12 +87,15 @@ def _segmin_kernel(seg_ref, w_ref, eid_ref, alive_ref, cw_ref, ce_ref,
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def segmin_candidates(seg: jax.Array, w: jax.Array, eid: jax.Array,
                       alive: jax.Array, *, block: int = 512,
-                      interpret: bool = True):
+                      interpret: Optional[bool] = None):
     """Phase-1 kernel call. Arrays are padded to a multiple of ``block``.
 
     Padding entries must carry alive=False (any seg value).  Returns
-    (cand_w f32 [M], cand_eid i32 [M]).
+    (cand_w f32 [M], cand_eid i32 [M]).  ``interpret=None`` resolves
+    via ``default_interpret()`` (compiled on TPU, interpreted elsewhere).
     """
+    if interpret is None:
+        interpret = default_interpret()
     m = seg.shape[0]
     block = min(block, max(m, 8))
     pad = (-m) % block

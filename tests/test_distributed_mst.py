@@ -32,7 +32,7 @@ for mesh, axes, nsh in [(mesh1d, ("data",), 8), (mesh2d, ("row", "col"), 8)]:
         for algo in ("boruvka", "filter_boruvka"):
             for pre in (True, False):
                 with mesh:
-                    mask, wt, cnt, labels = distributed_msf(
+                    mask, wt, cnt, labels, stats = distributed_msf(
                         g, n, mesh, algorithm=algo, axis_names=axes,
                         local_preprocessing=pre)
                 assert abs(float(wt) - expect) < 1e-3 * max(1.0, expect), (

@@ -94,6 +94,54 @@ def test_distributed_engines_match_oracle():
     assert "OK" in out
 
 
+# the sharded engine's ISSUE 2 communication levers, each toggled alone
+# plus all together, must keep the MSF edge set bit-identical to the
+# oracle on the adversarial families (heavy ties exercise the (w, eid)
+# tie-break through the src-only owner-side marking; disconnected
+# exercises the dead-edge retirement's termination)
+SHARDED_FLAGS = inspect.getsource(graph_families) + """
+from jax.sharding import Mesh
+from repro.core import oracle
+from repro.core.graph import from_numpy
+from repro.core.mst import minimum_spanning_forest
+
+mesh = Mesh(np.array(jax.devices()), ("data",))
+COMBOS = [
+    dict(local_preprocessing=False, coalesce=False, src_only=False,
+         adaptive_doubling=False),                       # the PR 1 baseline
+    dict(local_preprocessing=True, coalesce=False, src_only=False,
+         adaptive_doubling=False),
+    dict(local_preprocessing=False, coalesce=True, src_only=False,
+         adaptive_doubling=False),
+    dict(local_preprocessing=False, coalesce=False, src_only=True,
+         adaptive_doubling=False),
+    dict(local_preprocessing=False, coalesce=False, src_only=False,
+         adaptive_doubling=True),
+    dict(),                                              # all levers on
+]
+
+for fam in ("random", "clustered", "dup_weights", "disconnected"):
+    u, v, w, n = FAMILIES[fam](0)
+    edges = from_numpy(u, v, w, n)
+    kmask, kweight = oracle.kruskal(u, v, w, n)
+    for combo in COMBOS:
+        mask, wt = minimum_spanning_forest(
+            edges, algorithm="boruvka", engine="distributed_sharded",
+            mesh=mesh, **combo)
+        mk = np.asarray(mask)
+        assert np.array_equal(np.nonzero(mk)[0], np.nonzero(kmask)[0]), (
+            fam, combo, "edge set differs from oracle")
+        assert abs(float(wt) - kweight) < 1e-3 * max(1.0, kweight), (
+            fam, combo, float(wt), kweight)
+print("OK")
+"""
+
+
+def test_sharded_optimization_flags_match_oracle():
+    out = run_multidevice(SHARDED_FLAGS, ndev=8, timeout=1800)
+    assert "OK" in out
+
+
 @settings(max_examples=40, deadline=None)
 @given(st.data())
 def test_property_random_graphs_match_oracle(data):

@@ -16,7 +16,7 @@ for fam, n in [("gnm", 512), ("grid2d", 1024), ("rmat", 512)]:
     _, expect = oracle.kruskal(u, v, w, nn)
     ncomp = len(np.unique(oracle.component_labels(u, v, nn)))
     for pre in (True, False):
-        mask, wt, cnt, labels = distributed_msf(
+        mask, wt, cnt, labels, stats = distributed_msf(
             g, nn, mesh, algorithm="boruvka_shrink", axis_names=("data",),
             local_preprocessing=pre)
         assert abs(float(wt) - expect) < 1e-3 * max(1.0, expect), (
@@ -33,9 +33,9 @@ keep = u != v
 w = rng.integers(1, 5, keep.sum()).astype(np.float32)
 g, cap = build_dist_graph(u[keep], v[keep], w, 200, 8)
 _, expect = oracle.kruskal(u[keep], v[keep], w, 200)
-mask, wt, cnt, _ = distributed_msf(g, 200, mesh,
-                                   algorithm="boruvka_shrink",
-                                   axis_names=("data",))
+mask, wt, cnt, _, _ = distributed_msf(g, 200, mesh,
+                                      algorithm="boruvka_shrink",
+                                      axis_names=("data",))
 assert abs(float(wt) - expect) < 1e-3 * expect, (float(wt), expect)
 print("OK")
 """
