@@ -34,26 +34,55 @@ class ExchangeStats(NamedTuple):
     """Comm accumulator for the routed exchanges (the honest perf metric:
     on one host, wall time over virtual devices is noise — counting the
     all-to-alls and the routed volume is what separates engine variants;
-    benchmarks/sharded_scaling.py).
+    benchmarks/sharded_scaling.py reports these, and the per-round deltas
+    drive the sharded engine's shrinking capacity schedule trace).
 
-    All three are device-invariant scalars, safe to carry through
-    shard_map loops and to return with out_spec P():
-      * ``calls``  — ``lax.all_to_all`` invocations (grid schedules count
-        one per hop, matching what the interconnect actually executes);
-      * ``items``  — payload items accepted into send buffers, psum'd
-        (what request coalescing / dead-edge retirement shrink);
-      * ``bytes``  — capacity-padded buffer bytes shipped per call,
-        including the validity mask and the grid schedule's volume
-        multiplier (what smaller capacities shrink).  float32 because
-        int32 overflows on benchmark-sized runs.
+    All four are device-invariant scalars, safe to carry through
+    shard_map loops and to return with out_spec P().  Field-by-field,
+    with the units the benchmarks report:
+
+      * ``calls`` — int32 count of ``lax.all_to_all`` **invocations**.
+        One logical exchange of a k-array payload costs k + 1 buffer
+        all-to-alls (the +1 is the validity mask); a ``reply`` costs one
+        per answer array.  Grid schedules multiply by the hop count (one
+        invocation per mesh axis), matching what the interconnect
+        actually executes.  Unit: invocations, NOT items or bytes.
+      * ``items`` — float32 count of payload **items** accepted into
+        send buffers, psum'd over devices (a k-array payload item counts
+        once, not k times; ``reply`` counts every occupied receive
+        slot).  This is what request coalescing and dead-edge retirement
+        shrink.  Unit: routed items, independent of per-item width.
+      * ``bytes`` — float32 **capacity-padded buffer bytes** shipped per
+        invocation: every [p, capacity, ...] send buffer contributes its
+        full static size (validity mask included, grid hop multiplier
+        applied) whether or not the slots are occupied.  This is the
+        honest memory/wire cost of a static-shape exchange and is what a
+        smaller ``capacity`` shrinks even when ``items`` is unchanged.
+        Unit: bytes.  float32 because int32 overflows at benchmark size.
+      * ``slots`` — float32 count of **buffer slots** allocated across
+        calls: one logical exchange (or reply) adds ``p * capacity``
+        once, with no payload-width or hop multiplier.  This is the
+        capacity-per-call plumbing: ``slots`` divided by logical
+        exchanges recovers the average capacity a solve actually used,
+        which is how the shrinking-capacity schedule is audited without
+        re-deriving capacities from the code.  Unit: slots (rows), not
+        bytes.
+
+    ``CommStats`` (core/distributed.py) is the engine-level view of the
+    same counters (calls/items/bytes plus the Borůvka round count); the
+    replicated engine derives those analytically, the sharded engine
+    sums these accumulators, so benchmarks compare engines
+    like-for-like.
     """
-    calls: jax.Array   # [] int32
-    items: jax.Array   # [] float32
-    bytes: jax.Array   # [] float32
+    calls: jax.Array   # [] int32   — all_to_all invocations
+    items: jax.Array   # [] float32 — routed payload items (psum'd)
+    bytes: jax.Array   # [] float32 — capacity-padded buffer bytes
+    slots: jax.Array   # [] float32 — p * capacity rows per logical exchange
 
     @staticmethod
     def zeros() -> "ExchangeStats":
-        return ExchangeStats(jnp.int32(0), jnp.float32(0.0), jnp.float32(0.0))
+        return ExchangeStats(jnp.int32(0), jnp.float32(0.0),
+                             jnp.float32(0.0), jnp.float32(0.0))
 
 
 def _hops(axis_names: Sequence[str], schedule: str) -> int:
@@ -68,12 +97,20 @@ def _buffer_bytes(buffers) -> int:
 
 
 class ExchangeResult(NamedTuple):
+    """One routed exchange's receive-side view plus the bookkeeping a
+    later ``reply`` needs to route answers back.  ``capacity`` (``C``
+    below) is a per-call argument: two exchanges in the same program may
+    use different capacities — the sharded engine's shrinking schedule
+    relies on exactly that — and each call's capacity is recorded in
+    ``stats.slots``."""
     recv: jax.Array        # [p, C, ...] received payloads (source-major)
-    recv_ok: jax.Array     # [p, C] bool
+    recv_ok: jax.Array     # [p, C] bool — slot holds a delivered item
     sent_ok: jax.Array     # [L] bool — item was within capacity
     dest: jax.Array        # [L] int32 (echoed)
     slot: jax.Array        # [L] int32 position used in the send buffer
-    overflow: jax.Array    # [] int32, psum'd across devices
+    overflow: jax.Array    # [] int32 dropped-item count, psum'd (0 =>
+    #                        results exact; > 0 => caller must retry
+    #                        with a larger capacity — never silent)
     stats: Optional[ExchangeStats] = None  # set iff the caller threads one
 
 
@@ -132,7 +169,8 @@ def routed_exchange(payload, dest: jax.Array, valid: jax.Array,
         items = lax.psum(jnp.sum(ok.astype(jnp.float32)), names)
         stats = ExchangeStats(stats.calls + jnp.int32(nbuf * h),
                               stats.items + items,
-                              stats.bytes + jnp.float32(by * h))
+                              stats.bytes + jnp.float32(by * h),
+                              stats.slots + jnp.float32(p * capacity))
     return ExchangeResult(recv, recv_ok, ok, dest, pos, overflow, stats)
 
 
@@ -157,10 +195,13 @@ def reply(ex: ExchangeResult, answers, axis_names: Sequence[str],
     h = _hops(names, schedule)
     by = _buffer_bytes(answers)
     items = lax.psum(jnp.sum(ex.recv_ok.astype(jnp.float32)), names)
-    nbuf = len(jax.tree.leaves(answers))
+    leaves = jax.tree.leaves(answers)
+    nbuf = len(leaves)
+    slots = leaves[0].shape[0] * leaves[0].shape[1] if leaves else 0
     stats = ExchangeStats(stats.calls + jnp.int32(nbuf * h),
                           stats.items + items,
-                          stats.bytes + jnp.float32(by * h))
+                          stats.bytes + jnp.float32(by * h),
+                          stats.slots + jnp.float32(slots))
     return out, stats
 
 

@@ -122,6 +122,45 @@ def _doubling_iters(n: int) -> int:
     return max(1, math.ceil(math.log2(max(n, 2))))
 
 
+def shrink_schedule(full: int, floor: int = 1) -> Tuple[int, ...]:
+    """Geometric halving ladder ``(full, ceil(full/2), ..., floor)``.
+
+    The shared shrink discipline of the repo: Borůvka at least halves the
+    number of active components per round, so any per-round quantity that
+    is bounded by the active set can be sized from this ladder.  Used by
+    ``_distributed_rounds_shrink`` (the dense engine's per-round vector
+    sizes) and by the sharded engine's per-round exchange-capacity
+    schedule (``distributed_sharded.py``: the static unroll of decreasing
+    MINEDGES / lookup / contract capacities).  For ``full >= 2`` the
+    ladder has ``ceil(log2(full)) + 1`` rungs — the same count as the
+    engines' round bound ``_doubling_iters(full) + 1``.
+    """
+    out = [max(int(full), floor)]
+    while out[-1] > floor:
+        out.append(max(-(-out[-1] // 2), floor))
+    return tuple(out)
+
+
+def quantize_capacity(bound: int, full: int, floor: int = 1) -> int:
+    """Smallest ``shrink_schedule(full, floor)`` rung ``>= bound``.
+
+    Snapping measured per-round bounds to the ladder keeps the number of
+    distinct (and therefore separately compiled) capacity configurations
+    logarithmic while never under-sizing a buffer: the rung is an upper
+    bound on ``bound``, and a ``bound`` above every rung returns ``full``
+    (callers never pass one, but an explicit undersized user capacity
+    must stay undersized so its overflow is *reported*, not papered
+    over).
+    """
+    best = max(int(full), floor)
+    for rung in shrink_schedule(full, floor):
+        if rung >= bound:
+            best = rung
+        else:
+            break
+    return best
+
+
 def _vary(x, axes):
     """pvary only the axes the value is not already varying over."""
     return compat.vary(x, axes)
@@ -339,18 +378,23 @@ def _distributed_rounds_shrink(u, v, w, eid, valid, labels, mst, n: int,
     cap = u.shape[0]
     iota = jnp.arange(n, dtype=jnp.int32)
     esent = ESENT
-    rounds = _doubling_iters(n) + 1
+    # per-round vector sizes come from the shared geometric ladder (the
+    # halving structure the sharded engine's capacity schedule reuses);
+    # for n >= 2 its length equals the old _doubling_iters(n) + 1 round
+    # bound.  max(n, 1) — not 2 — so a single-vertex graph's first rung
+    # never exceeds the n-sized rep/cid buffers below.
+    sizes = shrink_schedule(max(n, 1))
+    rounds = len(sizes)
 
     # active-slot mapping over vertex-label space; initially every vertex
     # label is its own active slot.
     cid = iota  # [n] vertex-label -> active slot (or >= s below)
     rep = iota  # [n-sized buffer] slot -> representative vertex label
-    s = n
     acc_items = 0  # static: allreduced items (3 (s+1)-vectors per round)
 
-    for r in range(rounds):
+    for r, s in enumerate(sizes):
         acc_items += 3 * (s + 1)
-        s_next = max((s + 1) // 2, 1)
+        s_next = sizes[r + 1] if r + 1 < rounds else 1
         pad = jnp.int32(s)  # inactive sentinel slot
         ru = jnp.where(valid, cid[labels[u]], pad)
         rv = jnp.where(valid, cid[labels[v]], pad)
@@ -411,7 +455,6 @@ def _distributed_rounds_shrink(u, v, w, eid, valid, labels, mst, n: int,
             jnp.where(merged_root, rep[:s], 0), mode="drop")
         cid = cid_next
         rep = rep_next
-        s = s_next
     return labels, mst, rounds, acc_items
 
 

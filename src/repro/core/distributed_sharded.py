@@ -15,14 +15,15 @@ individually toggleable; EXPERIMENTS.md §Sharded-label engine records
 the measured all-to-all / routed-volume deltas):
 
   LOCALPREPROCESSING  (``local_preprocessing=True``, Section IV-A)
-             Contract provably-local MST edges comm-free (shared
-             boundary vertices stay roots, same core as the replicated
-             engine), then seed the routed rounds with ONE routed label
-             scatter to the owners — not the dense psum(n) the
-             replicated engine uses, which would reintroduce the O(n)
-             collective this representation exists to avoid.  Edges both
-             of whose endpoints were contracted into the same component
-             are retired into the ``dead`` mask before the first round.
+             Contract provably-local MST edges comm-free, then seed the
+             routed rounds with ONE routed label scatter to the owners.
+             The contraction runs in the shard's **bucketed vertex
+             space** — the distinct source ids of its sorted edge slice,
+             at most edges/shard of them — so no [n]-sized scratch is
+             ever materialised (ISSUE 3: peak memory O(n/p) in *every*
+             phase, not just the carried state).  Edges both of whose
+             endpoints were contracted into the same component are
+             retired into the ``dead`` mask before the first round.
   MINEDGES   Each edge shard looks up the component of both endpoints
              from the owners (request/reply).  With ``coalesce=True``
              the lexicographically sorted edge array is deduplicated
@@ -40,15 +41,39 @@ the measured all-to-all / routed-volume deltas):
   CONTRACT   Pointer doubling over the sharded parent array: each
              doubling step is one request_reply round asking
              ``owner(parent[x])`` for ``parent[parent[x]]``
-             (EXCHANGELABELS).  The 2-cycle of a pair of components that
-             choose each other is broken toward the smaller id.  With
-             ``adaptive_doubling=True`` the fixed log2(n) schedule
-             becomes a while_loop that stops one step after no parent
-             changes (post round 1 contraction trees are shallow).
+             (EXCHANGELABELS).  Slots whose parent is themselves (roots
+             and everything without a chosen edge) answer locally and
+             never enter the exchange.  The 2-cycle of a pair of
+             components that choose each other is broken toward the
+             smaller id.  With ``adaptive_doubling=True`` the fixed
+             log2(n) schedule becomes a while_loop that stops one step
+             after no parent changes (post round 1 contraction trees are
+             shallow).
   RELABEL    Every owned vertex re-resolves its label through one more
              lookup of the contracted parent array.  Slots whose
              endpoints resolve to the same component join the persistent
              ``dead`` mask and stop generating requests and candidates.
+
+Shrinking capacity schedule (ISSUE 3 tentpole, ``shrink_capacities``,
+default on): with flat capacities every round ships MINEDGES buffers
+sized for the worst case ``edge_capacity = edges/shard`` even after the
+dead-edge mask has retired most of the graph.  The shrinking driver
+instead runs the *same* round body one jitted step at a time from the
+host: before each round it bounds next round's exchanges from the
+measured dead-edge mask (alive slots per shard for MINEDGES, the
+alive-run-head count for coalesced lookups, the alive-component count
+per owner for CONTRACT), snaps each bound up to the geometric capacity
+ladder shared with ``boruvka_shrink`` (``core/distributed.py:
+shrink_schedule`` — a small static unroll of decreasing capacities, so
+the number of distinct compiled step programs stays logarithmic), and
+compiles/reuses the step at those capacities.  Bounds are exact by
+construction — a slot sends at most one candidate, a run sends at most
+one request, a component requests at most one parent hop — so overflow
+stays 0 and results are bit-identical to the flat engine; the explicit
+overflow accounting remains as the safety net for user-supplied
+capacities.  The dominant buffer-bytes term thereby decays geometrically
+across rounds instead of staying flat (EXPERIMENTS.md §Shrinking
+capacity schedule has the measured per-round trajectory).
 
 Chosen-edge marking: in src-only mode a mutual pair of components
 necessarily chose the *same* edge (each side's minimum bounds the
@@ -76,7 +101,7 @@ from __future__ import annotations
 import functools
 import math
 from functools import partial
-from typing import Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -85,11 +110,11 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.comm.exchange import ExchangeStats, reply, routed_exchange
+from repro.comm.exchange import (ExchangeStats, _hops, reply,
+                                 routed_exchange)
 from repro.core.distributed import (ESENT, CommStats, DistGraph,
-                                    _doubling_iters,
-                                    _local_preprocessing_core,
-                                    _weight_pivots)
+                                    _doubling_iters, _weight_pivots,
+                                    quantize_capacity)
 from repro.kernels.segmin.ops import run_metadata
 
 
@@ -157,38 +182,143 @@ def _coalesced_lookup(table: jax.Array, vids: jax.Array, runs,
 def _sharded_preprocess(u, v, w, eid, valid, n: int, vps: int,
                         capacity: int, axes: Tuple[str, ...],
                         schedule: str, stats: ExchangeStats):
-    """Sharded LOCALPREPROCESSING (Section IV-A + ISSUE 2 lever 1).
+    """Sharded LOCALPREPROCESSING (Section IV-A) with O(edges/shard) peak.
 
-    Runs the comm-free local contraction, then seeds the sharded label
-    vector with ONE routed scatter of the changed (vid, root) pairs to
-    the owners — each vertex is contracted on at most one shard, so the
-    owner-side scatter has no conflicts.  Also returns the initial
-    ``dead`` slot mask: edges whose endpoints contracted into the same
-    local component can never be MSF candidates again.
+    PR 2's version ran the replicated engine's dense contraction core
+    and scattered the changed labels to the owners — correct, but its
+    transient [n] scratch (per-shard label / min-reduction vectors and
+    an L = n routed exchange) made preprocessing the one phase whose
+    *peak* memory was O(n) per device.  This version contracts in the
+    shard's **bucketed vertex space** instead: the distinct source ids
+    of its (lexicographically sorted) edge slice, indexed by run rank —
+    at most cap = edges/shard of them.  Every endpoint of a
+    provably-local edge appears as a source on this shard (the doubled
+    representation guarantees the reverse copy, and a source run that
+    straddles a shard boundary makes its vertex shared, hence
+    non-local), so run ranks cover every vertex the contraction may
+    touch and all scratch is [cap + 1]-sized, never [n].
+
+    The contraction itself is the Section IV-A discipline of
+    ``_local_preprocessing_core`` transplanted into rank space: shared
+    boundary vertices stay roots, a component contracts only if its
+    global (w, eid)-minimum edge is provably local, ties break on the
+    global undirected eid, so the contracted edges are a subset of the
+    unique MSF and the final edge set stays bit-identical to the
+    Kruskal oracle.
 
     Returns (lab [vps], pre_mst [cap] bool, dead0 [cap] bool, overflow,
-    stats).  Capacity ``label_capacity`` is overflow-free by
-    construction: an owner owns ``vps`` vertices, so no sender can have
-    more than ``vps`` changed labels for it.
+    stats).  The owner scatter ships one (vid, root) pair per *changed
+    distinct vertex* (L = cap, down from the old L = n): an owner owns
+    ``vps`` vertices and a shard has at most cap distinct sources, so
+    the effective ``min(capacity, cap)`` stays overflow-free by
+    construction for the default ``label_capacity``.
     """
     names = tuple(axes)
-    loc_labels, pre_mst = _local_preprocessing_core(u, v, w, eid, valid,
-                                                    n, names)
-    iota_n = jnp.arange(n, dtype=jnp.int32)
-    changed = loc_labels != iota_n
-    ex = routed_exchange((compat.vary(iota_n, names), loc_labels),
-                         iota_n // vps, changed, capacity, names,
-                         schedule, stats=stats)
+    cap = u.shape[0]
+    big = jnp.int32(n)  # > every vertex id; doubles as "no vertex"
+
+    # --- shard boundary structure (tiny [p] all_gathers, no [n] mask) --
+    cnt = jnp.sum(valid.astype(jnp.int32))
+    has_edges = cnt > 0
+    first = jnp.where(has_edges, u[0], -1)
+    last = jnp.where(has_edges, u[jnp.clip(cnt - 1, 0, cap - 1)], -2)
+    firsts = lax.all_gather(first, names, tiled=False).reshape(-1)
+    lasts = lax.all_gather(last, names, tiled=False).reshape(-1)
+    p = firsts.shape[0]
+    k = max(p - 1, 1)
+    if p > 1:
+        shared = (lasts[:-1] == firsts[1:]) & (lasts[:-1] >= 0)
+        sh_ids = jnp.sort(jnp.where(shared, lasts[:-1].astype(jnp.int32),
+                                    big))
+    else:
+        sh_ids = compat.vary(jnp.full((k,), big), names)
+
+    def is_shared(x):
+        j = jnp.clip(jnp.searchsorted(sh_ids, x), 0, k - 1)
+        return sh_ids[j] == x
+
+    # --- bucketed local vertex space: distinct sources by run rank -----
+    vu = jnp.where(valid, u, big)  # valid slots are a sorted prefix
+    head = jnp.concatenate([compat.vary(jnp.ones((1,), bool), names),
+                            vu[1:] != vu[:-1]])
+    du = jnp.cumsum(head.astype(jnp.int32)) - 1          # [cap] slot -> rank
+    uvals = compat.vary(jnp.full((cap,), big), names).at[du].set(vu)
+    dv = jnp.clip(jnp.searchsorted(uvals, v), 0, cap - 1)
+    v_found = (uvals[dv] == v) & valid
+    shared_rank = is_shared(uvals)
+    local_edge = valid & v_found & ~is_shared(u) & ~is_shared(v)
+
+    iota = jnp.arange(cap, dtype=jnp.int32)
+    sent = jnp.int32(cap)  # drop row of the [cap + 1] scatter arrays
+    nloc = max(min(n, cap), 2)  # distinct local vertices <= min(n, cap)
+
+    def round_(state):
+        lab, mst, _, r = state
+        ru = lab[du]
+        rvx = jnp.where(v_found, lab[dv], sent)
+        same = v_found & (lab[du] == lab[dv])
+        alive = valid & ~same
+        wk = jnp.where(alive, w, jnp.inf)
+        wmin = jnp.full((cap + 1,), jnp.inf, w.dtype
+                        ).at[ru].min(wk).at[rvx].min(wk)
+        # tie-break by the *global undirected* eid (not the local slot or
+        # rank) so the contracted edges are a subset of the unique
+        # (w, eid) MSF — the same total order every engine uses
+        at_min_u = jnp.isfinite(wk) & (wk == wmin[ru])
+        at_min_v = jnp.isfinite(wk) & (wk == wmin[rvx])
+        eminid = jnp.full((cap + 1,), ESENT, jnp.int32)
+        eminid = eminid.at[ru].min(jnp.where(at_min_u, eid, ESENT))
+        eminid = eminid.at[rvx].min(jnp.where(at_min_v, eid, ESENT))
+        cu = jnp.where(at_min_u & (eid == eminid[ru]), iota, sent)
+        cv = jnp.where(at_min_v & (eid == eminid[rvx]), iota, sent)
+        emin = jnp.full((cap + 1,), sent, jnp.int32
+                        ).at[ru].min(cu).at[rvx].min(cv)
+        has = emin[:cap] < sent
+        ce = jnp.clip(emin[:cap], 0, cap - 1)
+        # contract only if the component's global-min edge is local
+        eligible = has & local_edge[ce] & ~shared_rank
+        emin_m = jnp.where(eligible, emin[:cap], sent)
+        ce = jnp.clip(emin_m, 0, cap - 1)
+        cru = lab[du[ce]]
+        crv = lab[dv[ce]]
+        other = cru + crv - iota
+        parent = jnp.where(eligible, other, iota)
+        gp = parent[parent]
+        parent = jnp.where((gp == iota) & (iota < parent), iota, parent)
+        roots = lax.fori_loop(0, _doubling_iters(nloc),
+                              lambda _, p_: p_[p_], parent)
+        mst = mst.at[ce].max(eligible.astype(jnp.int32))
+        lab = roots[lab]
+        return lab, mst, jnp.any(eligible), r + 1
+
+    max_rounds = _doubling_iters(nloc) + 1
+
+    def cond(state):
+        return state[2] & (state[3] < max_rounds)
+
+    lab0 = compat.vary(iota, names)
+    mst0 = compat.vary(jnp.zeros((cap,), jnp.int32), names)
+    lab, mst, _, _ = lax.while_loop(
+        cond, round_,
+        (lab0, mst0, compat.vary(jnp.array(True), names), jnp.int32(0)))
+
+    # --- one routed (vid, root) scatter to the owners ------------------
+    groot = uvals[lab]                 # [rank] -> global root vid
+    root_slot = groot[du]              # [cap] per-slot root of its source
+    changed = head & valid & (root_slot != u)
+    ex = routed_exchange((u, root_slot), u // vps, changed,
+                         min(capacity, cap), names, schedule, stats=stats)
     base = lax.axis_index(names) * vps
     vid = base + jnp.arange(vps, dtype=jnp.int32)
     rvid = ex.recv[0].reshape(-1)
     rlab = ex.recv[1].reshape(-1)
     ok = ex.recv_ok.reshape(-1)
     off = jnp.where(ok, rvid - base, vps)  # vps = drop row
-    lab = jnp.concatenate([vid, jnp.full((1,), -1, jnp.int32)]
-                          ).at[off].set(rlab)[:vps]
-    dead0 = loc_labels[u] == loc_labels[v]  # includes self-loops u == v
-    return lab, pre_mst, dead0, ex.overflow, ex.stats
+    lab_out = jnp.concatenate([vid, jnp.full((1,), -1, jnp.int32)]
+                              ).at[off].set(rlab)[:vps]
+    same = v_found & (lab[du] == lab[dv])
+    dead0 = (u == v) | same  # locally-internal edges incl. self-loops
+    return lab_out, mst.astype(bool), dead0, ex.overflow, ex.stats
 
 
 def _owner_scatter_min(comp, wc, ec, oc, okc, base, vps: int):
@@ -259,33 +389,68 @@ def _sharded_minedges(ru, rv, wk, eid, alive, vps: int, capacity: int,
     return has, other, win, ex_u.overflow + ex_v.overflow, st
 
 
-def _sharded_minedges_src(ru, rv, wk, eid, alive, vps: int, capacity: int,
-                          axes: Tuple[str, ...], schedule: str,
-                          stats: ExchangeStats):
-    """Owner-computes MINEDGES, src-only variant (ISSUE 2 lever 3).
+def _sharded_minedges_src(ru, rv, wk, eid, alive, runs, vps: int,
+                          capacity: int, axes: Tuple[str, ...],
+                          schedule: str, stats: ExchangeStats):
+    """Owner-computes MINEDGES, src-only variant (ISSUE 2 lever 3 +
+    ISSUE 3 per-run candidate aggregation).
 
     Both directed copies of every edge are present, so the owner of
     component ``c`` already receives every edge incident to ``c``
     through the ``ru``-keyed exchange alone (the invariant
     ``boruvka_shrink_srconly`` exploits in the replicated engine): the
     ``rv``-keyed exchange is dropped, halving MINEDGES to 1 routed
-    exchange + 1 confirmation.  The confirmation is deferred — the
-    caller replies through the returned ``ex`` once the contraction's
-    first lookup has revealed which winners are the larger side of a
-    2-cycle (see module docstring: exact-once marking).
+    exchange + 1 confirmation.
+
+    Candidates are additionally **pre-aggregated per source run** (the
+    classic combiner): the edge array is sorted by source, every slot of
+    a contiguous equal-``u`` run shares its source component, and the
+    owner's scatter-min only needs each run's local (w, eid)-argmin —
+    min-of-mins is exact and the tie order is unchanged, so the chosen
+    edge set is bit-identical.  One candidate per *alive run* instead of
+    one per alive slot divides the exchange volume by the average run
+    length and — decisive for the shrinking capacity schedule — makes
+    the host's exact per-(shard, owner) candidate bound decay with the
+    alive-run count rather than the raw alive-edge count
+    (``_minedges_capacity_bound``).
+
+    The confirmation is deferred — the caller replies through the
+    returned ``ex`` once the contraction's first lookup has revealed
+    which winners are the larger side of a 2-cycle (see module
+    docstring: exact-once marking), then fans the per-run confirmation
+    back onto the run's argmin slot via ``loc_win``/``head_idx``.
 
     Returns (has [vps], other [vps], is_win [p*C] flat, off [p*C] flat
-    owner slot per candidate, ex).
+    owner slot per candidate, ex, loc_win [L] — the run's argmin slot,
+    head_idx [L] — each slot's run head).
     """
     names = tuple(axes)
     base = lax.axis_index(names) * vps
-    ex = routed_exchange((ru, wk, eid, rv), ru // vps, alive, capacity,
+    head, head_idx, run_id = runs
+    L = ru.shape[0]
+    # per-run segmented (w, eid) argmin over alive slots (O(cap) scratch)
+    wrun = compat.vary(jnp.full((L,), jnp.inf, wk.dtype), names
+                       ).at[run_id].min(wk)
+    at_min = alive & (wk == wrun[run_id])
+    erun = compat.vary(jnp.full((L,), ESENT, jnp.int32), names
+                       ).at[run_id].min(jnp.where(at_min, eid, ESENT))
+    loc_win = at_min & (eid == erun[run_id])
+    orun = compat.vary(jnp.full((L,), -1, jnp.int32), names
+                       ).at[run_id].max(jnp.where(loc_win, rv, -1))
+    crun = compat.vary(jnp.full((L,), -1, jnp.int32), names
+                       ).at[run_id].max(jnp.where(alive, ru, -1))
+    anyrun = compat.vary(jnp.zeros((L,), bool), names
+                         ).at[run_id].max(alive)
+    send = head & anyrun[run_id]
+    comp_c = crun[run_id]
+    ex = routed_exchange((comp_c, wrun[run_id], erun[run_id],
+                          orun[run_id]), comp_c // vps, send, capacity,
                          names, schedule, stats=stats)
     comp, w_, e_, o_ = (x.reshape(-1) for x in ex.recv)
     okc = ex.recv_ok.reshape(-1)
     has, other, is_win, off = _owner_scatter_min(comp, w_, e_, o_, okc,
                                                  base, vps)
-    return has, other, is_win, off, ex
+    return has, other, is_win, off, ex, loc_win, head_idx
 
 
 def _sharded_contract(has, other, n: int, vps: int, capacity: int,
@@ -303,6 +468,13 @@ def _sharded_contract(has, other, n: int, vps: int, capacity: int,
     log2(n) either way, so undersized capacities (garbage answers) can
     not loop forever.
 
+    Self-parents answer locally: only ``parent[x] != x`` rows enter the
+    exchange (a root's grandparent is itself), and the requesting set
+    only shrinks as doubling converges.  That is what lets the shrinking
+    capacity driver bound ``capacity`` by the per-owner alive-component
+    count instead of the flat vps — only components with a chosen edge
+    ever have a non-self parent.
+
     Returns (parent [vps] fully contracted, keep [vps] — exact-once
     owner-side marking decision for src-only MINEDGES (winner and not
     the larger side of a 2-cycle), overflow, stats).
@@ -310,11 +482,15 @@ def _sharded_contract(has, other, n: int, vps: int, capacity: int,
     names = tuple(axes)
     base = lax.axis_index(names) * vps
     vid = base + jnp.arange(vps, dtype=jnp.int32)
-    ones = compat.vary(jnp.ones((vps,), bool), names)
     parent0 = jnp.where(has, other, vid)
-    gp, _, ov0, stats = _sharded_lookup(parent0, parent0, ones, vps,
-                                        capacity, names, schedule,
-                                        stats=stats)
+
+    def hop(par, st):
+        req = par != vid
+        nxt, _, o, st = _sharded_lookup(par, par, req, vps, capacity,
+                                        names, schedule, stats=st)
+        return jnp.where(req, nxt, par), o, st
+
+    gp, ov0, stats = hop(parent0, stats)
     # a 2-cycle (mutually chosen components) necessarily chose the SAME
     # edge — each side's minimum bounds the other's — so `keep` marks
     # every winning (component, edge) pair on exactly one owner
@@ -326,8 +502,7 @@ def _sharded_contract(has, other, n: int, vps: int, capacity: int,
     if adaptive:
         def dbl_a(carry):
             par, ov, st, i, _ = carry
-            nxt, _, o, st = _sharded_lookup(par, par, ones, vps, capacity,
-                                            names, schedule, stats=st)
+            nxt, o, st = hop(par, st)
             chg = lax.psum(jnp.sum((nxt != par).astype(jnp.int32)),
                            names) > 0
             return nxt, ov + o, st, i + 1, chg
@@ -341,13 +516,76 @@ def _sharded_contract(has, other, n: int, vps: int, capacity: int,
     else:
         def dbl(_, carry):
             par, ov, st = carry
-            nxt, _, o, st = _sharded_lookup(par, par, ones, vps, capacity,
-                                            names, schedule, stats=st)
+            nxt, o, st = hop(par, st)
             return nxt, ov + o, st
 
         parent, ov, stats = lax.fori_loop(0, iters, dbl,
                                           (parent, ov0, stats))
     return parent, keep, ov, stats
+
+
+def _round_body(u, v, w, eid, live0, lab, mst, dead, runs_u, runs_v,
+                n: int, vps: int, names: Tuple[str, ...], cap_edge: int,
+                cap_label: int, cap_lookup: int, cap_contract: int,
+                schedule: str, coalesce: bool, src_only: bool,
+                adaptive: bool, stats: ExchangeStats):
+    """One MINEDGES → CONTRACT → RELABEL round over 1D-sharded labels.
+
+    Shared verbatim by the fused while_loop engine (flat capacities,
+    AOT-lowerable) and the host-orchestrated shrinking-capacity driver,
+    so the two execution modes cannot diverge semantically — they only
+    differ in the static capacities each round is compiled with.
+    ``cap_contract`` bounds the doubling lookups; the flat path passes
+    ``cap_label`` (vps) for it, the shrinking driver the per-owner
+    alive-component bound.
+
+    Returns (lab, mst, dead, go, overflow_delta, stats).
+    """
+
+    def lookup_ep(table, runs, vids, live, st):
+        if coalesce:
+            return _coalesced_lookup(table, vids, runs, live, vps,
+                                     cap_lookup, names, schedule, st)
+        return _sharded_lookup(table, vids, live, vps, cap_lookup,
+                               names, schedule, stats=st)
+
+    live = live0 & ~dead
+    ru, ok_u, o1, st = lookup_ep(lab, runs_u if coalesce else None, u,
+                                 live, stats)
+    rv, ok_v, o2, st = lookup_ep(lab, runs_v, v, live, st)
+    looked = ok_u & ok_v
+    # dead-edge retirement: same component now => same forever
+    dead = dead | (looked & (ru == rv))
+    alive = looked & (ru != rv) & live
+    wk = jnp.where(alive, w, jnp.inf)
+    if src_only:
+        has, other, is_win, off, ex, loc_win, head_idx = \
+            _sharded_minedges_src(ru, rv, wk, eid, alive, runs_u, vps,
+                                  cap_edge, names, schedule, st)
+        parent, keep, o4, st = _sharded_contract(
+            has, other, n, vps, cap_contract, names, schedule, adaptive,
+            ex.stats)
+        keep_ext = jnp.concatenate([keep, jnp.zeros((1,), bool)])
+        confirm = (is_win & keep_ext[off]).reshape(ex.recv_ok.shape)
+        win, st = reply(ex, confirm, names, schedule, stats=st)
+        # per-run confirmation fans back onto the run's argmin slot;
+        # owner-side dedup => exactly one directed slot per MSF edge
+        mst = mst | (loc_win & (win & ex.sent_ok)[head_idx])
+        o3 = ex.overflow
+    else:
+        has, other, win, o3, st = _sharded_minedges(
+            ru, rv, wk, eid, alive, vps, cap_edge, names, schedule, st)
+        # both directed copies are confirmed; mark only the canonical
+        # one so the global mask is exact-once
+        mst = mst | (win & (u < v))
+        parent, _, o4, st = _sharded_contract(
+            has, other, n, vps, cap_contract, names, schedule, adaptive,
+            st)
+    lab, _, o5, st = _sharded_lookup(
+        parent, lab, compat.vary(jnp.ones((vps,), bool), names), vps,
+        cap_label, names, schedule, stats=st)
+    go = lax.psum(jnp.sum(has.astype(jnp.int32)), names) > 0
+    return lab, mst, dead, go, o1 + o2 + o3 + o4 + o5, st
 
 
 def _sharded_rounds(u, v, w, eid, valid, lab, mst, dead, n: int, vps: int,
@@ -356,7 +594,7 @@ def _sharded_rounds(u, v, w, eid, valid, lab, mst, dead, n: int, vps: int,
                     cap_lookup: int, overflow, stats: ExchangeStats,
                     rounds, schedule: str, coalesce: bool, src_only: bool,
                     adaptive: bool):
-    """Borůvka rounds with 1D-sharded labels.
+    """Borůvka rounds with 1D-sharded labels (fused while_loop, flat caps).
 
     ``active`` optionally restricts the edge set (the filter levels);
     ``dead`` persists across rounds AND levels (once ``ru == rv`` a slot
@@ -366,52 +604,18 @@ def _sharded_rounds(u, v, w, eid, valid, lab, mst, dead, n: int, vps: int,
     names = tuple(axes)
     live0 = valid if active is None else (valid & active)
     # run structure of the endpoint arrays is static across rounds
-    runs_u = run_metadata(u) if coalesce else None
+    # (coalesced lookups need both; src-only candidate aggregation the
+    # source side)
+    runs_u = run_metadata(u) if (coalesce or src_only) else None
     runs_v = run_metadata(v) if coalesce else None
-
-    def lookup_ep(table, runs, vids, live, st):
-        if coalesce:
-            return _coalesced_lookup(table, vids, runs, live, vps,
-                                     cap_lookup, names, schedule, st)
-        return _sharded_lookup(table, vids, live, vps, cap_lookup,
-                               names, schedule, stats=st)
 
     def round_(state):
         lab, mst, dead, _, r, ovf, st = state
-        live = live0 & ~dead
-        ru, ok_u, o1, st = lookup_ep(lab, runs_u, u, live, st)
-        rv, ok_v, o2, st = lookup_ep(lab, runs_v, v, live, st)
-        looked = ok_u & ok_v
-        # dead-edge retirement: same component now => same forever
-        dead = dead | (looked & (ru == rv))
-        alive = looked & (ru != rv) & live
-        wk = jnp.where(alive, w, jnp.inf)
-        if src_only:
-            has, other, is_win, off, ex = _sharded_minedges_src(
-                ru, rv, wk, eid, alive, vps, cap_edge, names, schedule, st)
-            parent, keep, o4, st = _sharded_contract(
-                has, other, n, vps, cap_label, names, schedule, adaptive,
-                ex.stats)
-            keep_ext = jnp.concatenate([keep, jnp.zeros((1,), bool)])
-            confirm = (is_win & keep_ext[off]).reshape(ex.recv_ok.shape)
-            win, st = reply(ex, confirm, names, schedule, stats=st)
-            # owner-side dedup => exactly one directed slot per MSF edge
-            mst = mst | (win & ex.sent_ok)
-            o3 = ex.overflow
-        else:
-            has, other, win, o3, st = _sharded_minedges(
-                ru, rv, wk, eid, alive, vps, cap_edge, names, schedule, st)
-            # both directed copies are confirmed; mark only the canonical
-            # one so the global mask is exact-once
-            mst = mst | (win & (u < v))
-            parent, _, o4, st = _sharded_contract(
-                has, other, n, vps, cap_label, names, schedule, adaptive,
-                st)
-        lab, _, o5, st = _sharded_lookup(
-            parent, lab, compat.vary(jnp.ones((vps,), bool), names), vps,
-            cap_label, names, schedule, stats=st)
-        go = lax.psum(jnp.sum(has.astype(jnp.int32)), names) > 0
-        return lab, mst, dead, go, r + 1, ovf + o1 + o2 + o3 + o4 + o5, st
+        lab, mst, dead, go, o, st = _round_body(
+            u, v, w, eid, live0, lab, mst, dead, runs_u, runs_v, n, vps,
+            names, cap_edge, cap_label, cap_lookup, cap_label, schedule,
+            coalesce, src_only, adaptive, st)
+        return lab, mst, dead, go, r + 1, ovf + o, st
 
     def cond(state):
         return state[3] & (state[4] < max_rounds)
@@ -503,12 +707,326 @@ def _build_sharded_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
         out_specs=(spec, P(), P(), spec, P(), P())))
 
 
+# --------------------------------------------------------------------------
+# shrinking-capacity driver: one jitted step per round, host-bounded caps
+# --------------------------------------------------------------------------
+
+def _sharded_prep_shard_fn(u, v, w, eid, n: int, vps: int,
+                           axes: Tuple[str, ...], cap_label: int,
+                           schedule: str):
+    valid = jnp.isfinite(w)
+    lab, pre_mst, dead0, ovf, st = _sharded_preprocess(
+        u, v, w, eid, valid, n, vps, cap_label, tuple(axes), schedule,
+        ExchangeStats.zeros())
+    return lab, pre_mst, dead0, ovf, st.calls, st.items, st.bytes, st.slots
+
+
+@functools.lru_cache(maxsize=64)
+def _build_sharded_prep_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
+                           axes: Tuple[str, ...], cap_label: int,
+                           schedule: str):
+    fn = partial(_sharded_prep_shard_fn, n=n, vps=vps, axes=axes,
+                 cap_label=cap_label, schedule=schedule)
+    spec = P(axes)
+    return jax.jit(compat.shard_map(
+        fn, mesh=mesh, in_specs=(spec, spec, spec, spec),
+        out_specs=(spec, spec, spec, P(), P(), P(), P(), P())))
+
+
+def _sharded_round_shard_fn(u, v, w, eid, lab, mst, dead, lo, hi,
+                            n: int, vps: int, axes: Tuple[str, ...],
+                            cap_edge: int, cap_label: int,
+                            cap_lookup: int, cap_contract: int,
+                            schedule: str, coalesce: bool,
+                            src_only: bool, adaptive: bool):
+    names = tuple(axes)
+    valid = jnp.isfinite(w)
+    live0 = valid & (w > compat.vary(lo, names)) \
+        & (w <= compat.vary(hi, names))
+    runs_u = run_metadata(u) if (coalesce or src_only) else None
+    runs_v = run_metadata(v) if coalesce else None
+    lab, mst, dead, go, ovf, st = _round_body(
+        u, v, w, eid, live0, lab, mst, dead, runs_u, runs_v, n, vps,
+        names, cap_edge, cap_label, cap_lookup, cap_contract, schedule,
+        coalesce, src_only, adaptive, ExchangeStats.zeros())
+    return (lab, mst, dead, go, ovf, st.calls, st.items, st.bytes,
+            st.slots)
+
+
+@functools.lru_cache(maxsize=256)
+def _build_sharded_round_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
+                            axes: Tuple[str, ...], cap_edge: int,
+                            cap_label: int, cap_lookup: int,
+                            cap_contract: int, schedule: str,
+                            coalesce: bool, src_only: bool,
+                            adaptive: bool):
+    fn = partial(_sharded_round_shard_fn, n=n, vps=vps, axes=axes,
+                 cap_edge=cap_edge, cap_label=cap_label,
+                 cap_lookup=cap_lookup, cap_contract=cap_contract,
+                 schedule=schedule, coalesce=coalesce, src_only=src_only,
+                 adaptive=adaptive)
+    spec = P(axes)
+    return jax.jit(compat.shard_map(
+        fn, mesh=mesh,
+        in_specs=(spec, spec, spec, spec, spec, spec, spec, P(), P()),
+        out_specs=(spec, spec, spec) + (P(),) * 6))
+
+
+def _host_weight_pivots(w_h: np.ndarray, valid_h: np.ndarray,
+                        num_levels: int, p: int, cap: int) -> np.ndarray:
+    """Host replica of ``_weight_pivots`` (identical sampling discipline:
+    same per-shard stride-64 sample, same gather order, same quantile
+    positions), so the shrinking driver buckets the filter levels exactly
+    like the fused engine and the two paths stay bit-identical."""
+    s = min(64, cap)
+    idx = (np.arange(s) * cap) // s
+    samp = []
+    for sh in range(p):
+        ws = w_h[sh * cap:(sh + 1) * cap]
+        vs = valid_h[sh * cap:(sh + 1) * cap]
+        samp.append(np.where(vs[idx], ws[idx], np.inf))
+    all_samp = np.sort(np.concatenate(samp).astype(np.float32))
+    nfin = max(int(np.isfinite(all_samp).sum()), 1)
+    pos = (np.arange(1, num_levels) * nfin) // num_levels
+    return all_samp[pos]
+
+
+def minedges_buffer_bytes(p: int, capacity: int, hops: int,
+                          src_only: bool) -> int:
+    """Static buffer bytes one MINEDGES phase ships at ``capacity``.
+
+    Mirrors comm/exchange.py's capacity-padded accounting: a candidate
+    exchange ships four [p, C] payload buffers (i32/f32/i32/i32) plus
+    the 1-byte validity mask, each hop; the confirmation reply ships one
+    [p, C] bool buffer.  src-only pays that once, the 2-exchange
+    baseline twice.  The shrinking-capacity driver uses this to expose
+    the per-round MINEDGES buffer-bytes trajectory in ``round_trace``
+    (the dominant term the schedule exists to shrink).
+    """
+    per_exchange = (4 * 4 + 1) * p * capacity * hops
+    per_reply = 1 * p * capacity * hops
+    k = 1 if src_only else 2
+    return k * (per_exchange + per_reply)
+
+
+def _per_pair_max(shard: np.ndarray, owner: np.ndarray, p: int) -> int:
+    """Max count over (source shard, destination owner) pairs."""
+    if owner.size == 0:
+        return 0
+    return int(np.bincount(shard * p + owner, minlength=p * p).max())
+
+
+def _host_run_heads(a, num_shards: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Host mirror of ``kernels/segmin run_metadata``: per-shard
+    contiguous equal-value run structure of a shard-major array.
+
+    Returns (heads [p * cap] bool — first slot of its run, with a head
+    forced at every shard start, exactly like the device computes runs
+    per shard — and rid [p * cap] int, globally numbered run ids).
+    Shared by every host-side capacity bound so the run definition
+    cannot diverge between them.
+    """
+    arr = np.asarray(a)
+    cap = arr.shape[0] // num_shards
+    a2 = arr.reshape(num_shards, cap)
+    head = np.ones((num_shards, cap), bool)
+    head[:, 1:] = a2[:, 1:] != a2[:, :-1]
+    flat = head.reshape(-1)
+    return flat, np.cumsum(flat) - 1
+
+
+def _minedges_capacity_bound(ru: np.ndarray, rv: np.ndarray,
+                             alive: np.ndarray, shard: np.ndarray,
+                             heads: np.ndarray, rid: np.ndarray,
+                             p: int, vps: int, src_only: bool) -> int:
+    """Exact MINEDGES candidate-exchange capacity for the coming round.
+
+    The host holds the full sharded label table between rounds, so the
+    candidate set — live slots whose endpoint components differ — and
+    its owner-keyed distribution are computable exactly: the capacity is
+    the maximum number of candidates any shard sends any owner.  In
+    src-only mode candidates are aggregated per source run
+    (``_sharded_minedges_src``), so the count is over *alive runs* keyed
+    by the run's component owner; the 2-exchange variant counts alive
+    slots under both endpoint keys.  Exact means the smaller buffers
+    stay overflow-free by construction, and the bound decays with the
+    alive-run / cross-component structure instead of staying at
+    edges/shard.  Returns 0 when no candidate exists (the round could
+    choose nothing).
+    """
+    if not alive.any():
+        return 0
+    if src_only:
+        run_alive = np.bincount(rid[alive],
+                                minlength=int(rid[-1]) + 1) > 0
+        cand = heads & run_alive[rid]
+        return _per_pair_max(shard[cand], ru[cand] // vps, p)
+    sa = shard[alive]
+    return max(_per_pair_max(sa, ru[alive] // vps, p),
+               _per_pair_max(sa, rv[alive] // vps, p))
+
+
+def _endpoint_lookup_bound(u_h: np.ndarray, v_h: np.ndarray,
+                           live_h: np.ndarray, shard: np.ndarray,
+                           p: int, vps: int) -> int:
+    """Exact per-(shard, owner) bound for the *uncoalesced* endpoint
+    lookups: every live slot requests both its endpoints' owners."""
+    sl = shard[live_h]
+    if sl.size == 0:
+        return 1
+    return max(1, _per_pair_max(sl, u_h[live_h] // vps, p),
+               _per_pair_max(sl, v_h[live_h] // vps, p))
+
+
+def _contract_capacity_bound(ru: np.ndarray, rv: np.ndarray,
+                             alive: np.ndarray, vps: int) -> int:
+    """Max per-owner count of distinct components incident to candidate
+    edges.
+
+    Bounds the contract-phase exchange rows exactly: only a component
+    with a chosen edge has a non-self parent (so only those slots
+    request, see ``_sharded_contract``), a choosing component received
+    at least one candidate, and the requesting set only shrinks as
+    doubling converges.  ``ru``/``rv`` are the host-resolved endpoint
+    components — the same values the device lookups will produce.
+    """
+    if not alive.any():
+        return 1
+    comp = np.unique(np.concatenate([ru[alive], rv[alive]]))
+    return max(1, int(np.bincount(comp // vps).max()))
+
+
+def _shrinking_capacity_msf(graph: DistGraph, n: int,
+                            mesh: jax.sharding.Mesh, axes: Tuple[str, ...],
+                            algorithm: str, num_levels: int,
+                            max_rounds: Optional[int], ce_full: int,
+                            cl: int, lk_full: int, schedule: str,
+                            local_preprocessing: bool, coalesce: bool,
+                            src_only: bool, adaptive: bool,
+                            round_trace: Optional[List[dict]]):
+    """Host-orchestrated rounds with per-round shrinking capacities.
+
+    Runs the same ``_round_body`` as the fused engine, one jitted step
+    per round, sizing each round's exchanges from host-side bounds on
+    the measured dead-edge mask (see module docstring).  Bounds are
+    snapped up to the ``shrink_schedule`` ladder so the set of compiled
+    step programs stays logarithmic and strictly reusable across rounds
+    and solves.  At overflow 0 (guaranteed for default capacities — the
+    bounds are exact by construction) the result is bit-identical to the
+    flat-capacity engine; the only observable difference is that a level
+    whose host bound hits zero skips its trailing empty round, which can
+    only *reduce* the round count.
+    """
+    p = 1
+    for a in axes:
+        p *= mesh.shape[a]
+    vps = vertices_per_shard(n, p)
+    cap = graph.cap_total // p
+    mr = (math.ceil(math.log2(max(n, 2))) + 1) if max_rounds is None \
+        else max_rounds
+    u_h = np.asarray(graph.u)
+    v_h = np.asarray(graph.v)
+    w_h = np.asarray(graph.w)
+    valid_h = np.isfinite(w_h)
+    hops = _hops(axes, schedule)
+
+    overflow = 0
+    acc = np.zeros(4, np.float64)  # calls, items, bytes, slots
+    if local_preprocessing:
+        prep = _build_sharded_prep_fn(n, vps, mesh, tuple(axes), cl,
+                                      schedule)
+        lab, pre_mst, dead, ovf, *st = prep(graph.u, graph.v, graph.w,
+                                            graph.eid)
+        overflow += int(ovf)
+        acc += [float(x) for x in st]
+    else:
+        lab = jnp.arange(p * vps, dtype=jnp.int32)
+        pre_mst = jnp.zeros((p * cap,), bool)
+        dead = jnp.asarray(u_h == v_h)
+    mst = jnp.zeros((p * cap,), bool)
+    dead_h = np.asarray(dead)
+
+    if algorithm == "boruvka":
+        windows = [(-np.inf, np.inf)]
+    elif algorithm == "filter_boruvka":
+        piv = _host_weight_pivots(w_h, valid_h, num_levels, p, cap)
+        edges_hi = [float(x) for x in piv]
+        los = [-np.inf] + edges_hi
+        his = edges_hi + [np.inf]
+        windows = list(zip(los, his))
+    else:
+        raise ValueError(algorithm)
+
+    rounds = 0
+    shard_of = np.repeat(np.arange(p), cap)
+    # static per-shard source-run structure (src-only aggregation bound)
+    heads, rid = _host_run_heads(u_h, p)
+    for lvl, (lo, hi) in enumerate(windows):
+        active_h = valid_h & (w_h > lo) & (w_h <= hi)
+        r = 0
+        while r < mr:
+            live_h = active_h & ~dead_h
+            lab_h = np.asarray(lab)
+            ru_h = lab_h[u_h]
+            rv_h = lab_h[v_h]
+            alive_h = live_h & (ru_h != rv_h)
+            bound_e = _minedges_capacity_bound(ru_h, rv_h, alive_h,
+                                               shard_of, heads, rid, p,
+                                               vps, src_only)
+            if bound_e == 0:
+                break  # no candidate exists: go would come back False
+            ce_r = quantize_capacity(bound_e, ce_full)
+            if coalesce:
+                lk_r = quantize_capacity(
+                    default_lookup_capacity(graph, p, n, alive=live_h),
+                    lk_full)
+            else:
+                lk_r = quantize_capacity(
+                    _endpoint_lookup_bound(u_h, v_h, live_h, shard_of,
+                                           p, vps), lk_full)
+            con_r = quantize_capacity(
+                _contract_capacity_bound(ru_h, rv_h, alive_h, vps), cl)
+            step = _build_sharded_round_fn(
+                n, vps, mesh, tuple(axes), ce_r, cl, lk_r, con_r,
+                schedule, coalesce, src_only, adaptive)
+            lab, mst, dead, go, ovf, *st = step(
+                graph.u, graph.v, graph.w, graph.eid, lab, mst, dead,
+                jnp.float32(lo), jnp.float32(hi))
+            overflow += int(ovf)
+            acc += [float(x) for x in st]
+            dead_h = np.asarray(dead)
+            rounds += 1
+            r += 1
+            if round_trace is not None:
+                round_trace.append({
+                    "round": rounds, "level": lvl,
+                    "cap_edge": ce_r, "cap_lookup": lk_r,
+                    "cap_contract": con_r, "alive_bound": bound_e,
+                    "minedges_buffer_bytes": minedges_buffer_bytes(
+                        p, ce_r, hops, src_only),
+                    "a2a_calls": int(st[0]),
+                    "routed_items": float(st[1]),
+                    "buffer_bytes": float(st[2]),
+                    "buffer_slots": float(st[3]),
+                })
+            if not bool(go):
+                break
+
+    mask = np.asarray(mst) | np.asarray(pre_mst)
+    weight = np.float32(np.sum(w_h[mask], dtype=np.float64))
+    count = np.int32(int(mask.sum()))
+    comm = CommStats(np.int32(acc[0]), np.float32(acc[1]),
+                     np.float32(acc[2]), np.int32(rounds))
+    return (jnp.asarray(mask), weight, count, lab, np.int32(overflow),
+            comm)
+
+
 def vertices_per_shard(n: int, num_shards: int) -> int:
     return max(1, -(-n // num_shards))
 
 
-def default_lookup_capacity(graph: DistGraph, num_shards: int,
-                            n: int) -> int:
+def default_lookup_capacity(graph: DistGraph, num_shards: int, n: int,
+                            alive: Optional[np.ndarray] = None) -> int:
     """Exact-by-construction capacity for the coalesced endpoint lookups.
 
     One host-side pass over the (already host-built) edge arrays counts,
@@ -517,19 +1035,28 @@ def default_lookup_capacity(graph: DistGraph, num_shards: int,
     any shard sends any owner.  Typically ~edges/(shard·avg_degree)
     instead of edges/shard, which shrinks the [p, C] lookup buffers by
     the same factor the coalescing shrinks the routed volume.
+
+    With ``alive`` (a [p * cap] bool mask of slots still live) only runs
+    containing at least one live slot count — exactly the runs the
+    engine's coalesced lookup will send a request for, so the bound
+    stays exact.  The shrinking-capacity driver calls this once per
+    round with the current dead-edge mask folded in.
     """
     vps = vertices_per_shard(n, num_shards)
     cap = graph.cap_total // num_shards
+    shard = np.repeat(np.arange(num_shards), cap)
+    live = None if alive is None else np.asarray(alive)
     mx = 1
     for arr in (graph.u, graph.v):
-        a = np.asarray(arr).reshape(num_shards, cap)
-        head = np.ones((num_shards, cap), bool)
-        head[:, 1:] = a[:, 1:] != a[:, :-1]
-        dest = a // vps
-        for s in range(num_shards):
-            d = dest[s][head[s]]
-            if d.size:
-                mx = max(mx, int(np.bincount(d).max()))
+        a = np.asarray(arr)
+        head, rid = _host_run_heads(a, num_shards)
+        send = head
+        if live is not None:
+            run_live = np.bincount(rid[live],
+                                   minlength=int(rid[-1]) + 1) > 0
+            send = head & run_live[rid]
+        mx = max(mx, _per_pair_max(shard[send], a[send] // vps,
+                                   num_shards))
     return mx
 
 
@@ -546,7 +1073,9 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
                             local_preprocessing: bool = True,
                             coalesce: bool = True,
                             src_only: bool = True,
-                            adaptive_doubling: bool = True):
+                            adaptive_doubling: bool = True,
+                            shrink_capacities: bool = True,
+                            round_trace: Optional[List[dict]] = None):
     """Run the sharded-label distributed MSF on a mesh.
 
     Returns (mask, weight, count, labels, overflow, stats):
@@ -563,9 +1092,21 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
         items, buffer bytes, rounds) — the honest comm metric the
         optimization flags move (benchmarks/sharded_scaling.py).
 
+    ``shrink_capacities=True`` (default) runs the host-orchestrated
+    per-round capacity schedule: each round's MINEDGES / lookup /
+    contract exchanges are sized from host bounds on the measured
+    dead-edge mask, snapped to the geometric ladder of
+    ``core/distributed.py: shrink_schedule`` — bit-identical results,
+    geometrically decaying buffer bytes.  ``round_trace`` (a caller
+    list) then receives one dict per round with the chosen capacities
+    and measured comm deltas.  Under AOT lowering (tracer inputs,
+    ``make_sharded_mst_step``) and with ``shrink_capacities=False`` the
+    fused single-program engine with flat capacities runs instead.
+
     The flags default to the optimized engine; passing
     ``local_preprocessing=False, coalesce=False, src_only=False,
-    adaptive_doubling=False`` reproduces the PR 1 baseline exactly.
+    adaptive_doubling=False, shrink_capacities=False`` reproduces the
+    PR 1 baseline exactly.
     """
     axes = tuple(axis_names or mesh.axis_names)
     p = 1
@@ -577,14 +1118,19 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
     # yields all-overflow results, which the overflow count reports
     ce = int(cap if edge_capacity is None else edge_capacity)
     cl = int(vps if label_capacity is None else label_capacity)
+    # the exact host-side bounds need concrete edge arrays; under AOT
+    # lowering (make_sharded_mst_step) fall back to the safe flat bound
+    concrete = not isinstance(graph.u, jax.core.Tracer)
     if lookup_capacity is None:
-        # the exact host-side bound needs concrete edge arrays; under AOT
-        # lowering (make_sharded_mst_step) fall back to the safe bound
-        concrete = not isinstance(graph.u, jax.core.Tracer)
         lk = default_lookup_capacity(graph, p, n) if (coalesce and concrete) \
             else ce
     else:
         lk = int(lookup_capacity)
+    if shrink_capacities and concrete:
+        return _shrinking_capacity_msf(
+            graph, n, mesh, axes, algorithm, num_levels, max_rounds, ce,
+            cl, lk, schedule, local_preprocessing, coalesce, src_only,
+            adaptive_doubling, round_trace)
     shard_fn = _build_sharded_fn(n, vps, mesh, axes, algorithm, num_levels,
                                  max_rounds, ce, cl, lk, schedule,
                                  local_preprocessing, coalesce, src_only,
@@ -594,7 +1140,11 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
 
 def make_sharded_mst_step(n: int, cap_total: int, mesh: jax.sharding.Mesh,
                           algorithm: str = "boruvka", **kw):
-    """AOT-lowerable sharded MSF step (dry-run/roofline harness parity)."""
+    """AOT-lowerable sharded MSF step (dry-run/roofline harness parity).
+
+    Traced inputs cannot drive the host-orchestrated shrinking schedule,
+    so the step lowers the fused flat-capacity engine (the
+    ``shrink_capacities`` knob is ignored under tracing)."""
     def step(u, v, w, eid):
         g = DistGraph(u, v, w, eid)
         return distributed_sharded_msf(g, n, mesh, algorithm=algorithm, **kw)

@@ -8,6 +8,17 @@
     "distributed_sharded" (shard_map with 1D-sharded labels and routed
     label exchange, the paper's scalable path; see
     core/distributed_sharded.py and EXPERIMENTS.md §Sharded-label engine)
+
+Mesh-engine knobs pass through ``**kw``: ``axis_names``, ``max_rounds``,
+``local_preprocessing``, and for the sharded engine the capacity knobs
+(``edge_capacity`` / ``label_capacity`` / ``lookup_capacity`` — explicit
+undersized values surface as the overflow error below), the comm levers
+(``coalesce``, ``src_only``, ``adaptive_doubling``), and
+``shrink_capacities`` (default on: per-round shrinking exchange
+capacities from host bounds on the dead-edge mask; pass False for the
+fused flat-capacity program, e.g. to compare counters).  The engine
+matrix with when-to-use guidance is in README.md; docs/ARCHITECTURE.md
+maps the knobs to the paper's phases.
 """
 from __future__ import annotations
 

@@ -1,0 +1,18 @@
+"""Docs integrity — mirrors the CI docs step: the top-level docs must
+exist and every intra-repo link in them must resolve
+(tools/check_links.py, ISSUE 3 satellite)."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def test_intra_repo_links():
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "check_links.py"),
+         "README.md", "docs/ARCHITECTURE.md", "EXPERIMENTS.md",
+         "ROADMAP.md"],
+        cwd=ROOT, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "OK" in proc.stdout

@@ -106,18 +106,17 @@ from repro.core.graph import from_numpy
 from repro.core.mst import minimum_spanning_forest
 
 mesh = Mesh(np.array(jax.devices()), ("data",))
+OFF = dict(local_preprocessing=False, coalesce=False, src_only=False,
+           adaptive_doubling=False, shrink_capacities=False)
 COMBOS = [
-    dict(local_preprocessing=False, coalesce=False, src_only=False,
-         adaptive_doubling=False),                       # the PR 1 baseline
-    dict(local_preprocessing=True, coalesce=False, src_only=False,
-         adaptive_doubling=False),
-    dict(local_preprocessing=False, coalesce=True, src_only=False,
-         adaptive_doubling=False),
-    dict(local_preprocessing=False, coalesce=False, src_only=True,
-         adaptive_doubling=False),
-    dict(local_preprocessing=False, coalesce=False, src_only=False,
-         adaptive_doubling=True),
-    dict(),                                              # all levers on
+    dict(OFF),                                           # the PR 1 baseline
+    dict(OFF, local_preprocessing=True),
+    dict(OFF, coalesce=True),
+    dict(OFF, src_only=True),
+    dict(OFF, adaptive_doubling=True),
+    dict(OFF, shrink_capacities=True),   # shrinking schedule alone
+    dict(shrink_capacities=False),       # all PR 2 levers, flat capacities
+    dict(),                              # everything incl. the schedule
 ]
 
 for fam in ("random", "clustered", "dup_weights", "disconnected"):

@@ -37,6 +37,17 @@ mask, wt, cnt, _, _ = distributed_msf(g, 200, mesh,
                                       algorithm="boruvka_shrink",
                                       axis_names=("data",))
 assert abs(float(wt) - expect) < 1e-3 * expect, (float(wt), expect)
+
+# degenerate sizes: the shrink ladder's first rung must never exceed the
+# n-sized slot buffers (n=1 regressed once when the ladder was clamped
+# to a minimum of 2)
+for nn in (1, 2):
+    g, cap = build_dist_graph(np.zeros(0, np.int32), np.zeros(0, np.int32),
+                              np.zeros(0, np.float32), nn, 8)
+    for algo in ("boruvka_shrink", "boruvka_shrink_srconly"):
+        out = distributed_msf(g, nn, mesh, algorithm=algo,
+                              axis_names=("data",))
+        assert float(out[1]) == 0.0 and int(out[2]) == 0, (nn, algo)
 print("OK")
 """
 

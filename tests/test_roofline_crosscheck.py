@@ -1,0 +1,61 @@
+"""Cross-check the replicated mesh engine's *analytic* comm counters
+(CommStats derived from round counts, core/distributed.py) against the
+HLO collective-bytes extraction of launch/roofline.py (ROADMAP open
+item; ISSUE 3 satellite).
+
+The engine claims its per-round traffic is exactly 3 allreduced
+n-vectors (wmin f32, emin i32, other i32) plus the preprocessing label
+combine and two tiny boundary all_gathers.  The roofline parser reads
+the same program's compiled HLO and weights while-loop bodies by their
+trip count, so pinning ``max_rounds`` to the measured round count makes
+the two views directly comparable.  Residual skew (the final
+weight/count scalar reductions the analytic side deliberately excludes,
+and any compiler-materialized masks) is documented in EXPERIMENTS.md
+§Roofline cross-check and bounded here.
+"""
+import pytest
+
+from tests.helpers.subproc import run_multidevice
+
+CROSSCHECK = """
+from jax.sharding import Mesh
+from repro.core.distributed import build_dist_graph, distributed_msf, \
+    make_mst_step
+from repro.launch.roofline import collective_bytes_from_hlo
+from repro.data import generators
+
+p = 8
+mesh = Mesh(np.array(jax.devices()), ("data",))
+u, v, w, n = generators.generate("gnm", 512, avg_degree=8.0, seed=3)
+g, cap = build_dist_graph(u, v, w, n, p)
+
+mask, wt, cnt, lab, st = distributed_msf(g, n, mesh, axis_names=("data",))
+rounds = int(st.rounds)
+analytic_bytes = float(st.bytes)
+assert rounds > 0 and analytic_bytes > 0
+
+# AOT-compile the same program pinned to the measured round count so the
+# HLO parser's while-loop trip weighting equals the executed rounds
+step, specs = make_mst_step(n, g.cap_total, mesh, algorithm="boruvka",
+                            axis_names=("data",), max_rounds=rounds)
+compiled = jax.jit(step).lower(*specs).compile()
+coll = collective_bytes_from_hlo(compiled.as_text())
+hlo_bytes = coll["all-reduce_bytes"] + coll["all-gather_bytes"]
+ratio = hlo_bytes / analytic_bytes
+print("rounds", rounds, "analytic_bytes", analytic_bytes,
+      "hlo_bytes", hlo_bytes, "ratio", round(ratio, 4))
+print("hlo_counts", {k: v for k, v in coll.items()
+                     if k.endswith("_count") and v})
+# known skew: the two one-off weight/count scalar reductions (excluded
+# from the analytic side by contract) and compiler-materialized booleans
+# -- small against the 12n bytes/round term.  A parser or counter
+# regression (double counting, wrong trip weighting) lands far outside
+# this band.
+assert 0.7 < ratio < 1.5, (analytic_bytes, hlo_bytes, ratio)
+print("OK")
+"""
+
+
+def test_replicated_analytic_counters_match_hlo():
+    out = run_multidevice(CROSSCHECK, ndev=8, timeout=900)
+    assert "OK" in out

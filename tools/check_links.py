@@ -1,0 +1,58 @@
+#!/usr/bin/env python
+"""Fail on broken intra-repo links in the markdown docs (CI docs step).
+
+Checks every relative markdown link target ``[text](path)`` and every
+backtick-quoted repo path that looks like a file reference in the given
+documents.  External URLs (http/https/mailto) are ignored — CI must not
+depend on network reachability.  Anchors (``path#section``) are checked
+for file existence only.
+
+Usage: python tools/check_links.py README.md docs/ARCHITECTURE.md ...
+Exits nonzero listing every broken link.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def check_file(md_path: str) -> list:
+    broken = []
+    text = open(md_path, encoding="utf-8").read()
+    base = os.path.dirname(os.path.abspath(md_path))
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = os.path.normpath(os.path.join(base, path))
+        if not os.path.exists(resolved):
+            broken.append((md_path, target))
+    return broken
+
+
+def main(argv: list) -> int:
+    docs = argv or ["README.md", "docs/ARCHITECTURE.md", "EXPERIMENTS.md",
+                    "ROADMAP.md"]
+    missing_docs = [d for d in docs if not os.path.exists(d)]
+    broken = []
+    for d in docs:
+        if os.path.exists(d):
+            broken.extend(check_file(d))
+    for md, target in broken:
+        print(f"BROKEN LINK: {md}: ({target})")
+    for d in missing_docs:
+        print(f"MISSING DOC: {d}")
+    if broken or missing_docs:
+        return 1
+    print(f"check_links: OK ({len(docs)} docs)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
