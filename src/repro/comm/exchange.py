@@ -14,6 +14,10 @@ Primitives:
   * ``request_reply``    — full round trip: route requests to their home
     shard, apply a local answer function, route answers back to the
     requesting slots (the paper's EXCHANGELABELS pattern).
+  * ``scatter_updates``  — push-style multicast: deliver item ``i`` to
+    every shard whose bit is set in ``dest_mask[i]`` (the ghost-vertex
+    dirty-label push of the sharded MST engine: an owner ships a changed
+    label to every subscriber shard in one exchange, no request leg).
 
 Used by: distributed MST (ghost-label exchange, redistribution) and the
 MoE layers (token->expert dispatch) — one primitive, two workloads.
@@ -66,23 +70,46 @@ class ExchangeStats(NamedTuple):
         exchanges recovers the average capacity a solve actually used,
         which is how the shrinking-capacity schedule is audited without
         re-deriving capacities from the code.  Unit: slots (rows), not
-        bytes.
+        bytes.  Conservation law (asserted in tests/test_comm.py): one
+        request/reply lookup contributes exactly ``2 * p * capacity`` —
+        never more; the primitives below only ever *carry* these fields
+        through (``_replace``), so a caller cannot double-book a call by
+        threading the same accumulator into both legs.
+      * ``hits`` / ``misses`` / ``pushed`` — float32 ghost-label-cache
+        counters (ISSUE 4), psum'd like ``items``.  ``misses`` counts
+        routed endpoint-lookup request items (with the cache disabled
+        every endpoint lookup is by definition a miss, so this is also
+        the per-round routed-lookup-volume counter the benchmarks
+        track); ``hits`` counts endpoint reads served from the local
+        ghost table (one per coalesced run that would otherwise have
+        sent a request); ``pushed`` counts the cache's *entire*
+        maintenance traffic — the root-delta items multicast through
+        ``scatter_updates`` plus the subscription build/forward
+        exchange items that keep the subscriber bitmasks with the
+        surviving roots — so ``misses + pushed`` covers everything the
+        cache ships.  The exchange primitives never touch these
+        fields — only the sharded engine's lookup/push sites do.
 
     ``CommStats`` (core/distributed.py) is the engine-level view of the
-    same counters (calls/items/bytes plus the Borůvka round count); the
-    replicated engine derives those analytically, the sharded engine
-    sums these accumulators, so benchmarks compare engines
-    like-for-like.
+    same counters (calls/items/bytes plus the Borůvka round count and
+    the ghost hit/miss/push triple); the replicated engine derives those
+    analytically, the sharded engine sums these accumulators, so
+    benchmarks compare engines like-for-like.
     """
     calls: jax.Array   # [] int32   — all_to_all invocations
     items: jax.Array   # [] float32 — routed payload items (psum'd)
     bytes: jax.Array   # [] float32 — capacity-padded buffer bytes
     slots: jax.Array   # [] float32 — p * capacity rows per logical exchange
+    hits: jax.Array    # [] float32 — ghost-cache label reads served locally
+    misses: jax.Array  # [] float32 — routed endpoint-lookup request items
+    pushed: jax.Array  # [] float32 — dirty labels multicast to subscribers
 
     @staticmethod
     def zeros() -> "ExchangeStats":
         return ExchangeStats(jnp.int32(0), jnp.float32(0.0),
-                             jnp.float32(0.0), jnp.float32(0.0))
+                             jnp.float32(0.0), jnp.float32(0.0),
+                             jnp.float32(0.0), jnp.float32(0.0),
+                             jnp.float32(0.0))
 
 
 def _hops(axis_names: Sequence[str], schedule: str) -> int:
@@ -167,10 +194,10 @@ def routed_exchange(payload, dest: jax.Array, valid: jax.Array,
         nbuf = len(jax.tree.leaves(payload)) + 1  # + validity mask
         by = _buffer_bytes(send) + _buffer_bytes(send_mask)
         items = lax.psum(jnp.sum(ok.astype(jnp.float32)), names)
-        stats = ExchangeStats(stats.calls + jnp.int32(nbuf * h),
-                              stats.items + items,
-                              stats.bytes + jnp.float32(by * h),
-                              stats.slots + jnp.float32(p * capacity))
+        stats = stats._replace(calls=stats.calls + jnp.int32(nbuf * h),
+                               items=stats.items + items,
+                               bytes=stats.bytes + jnp.float32(by * h),
+                               slots=stats.slots + jnp.float32(p * capacity))
     return ExchangeResult(recv, recv_ok, ok, dest, pos, overflow, stats)
 
 
@@ -198,11 +225,84 @@ def reply(ex: ExchangeResult, answers, axis_names: Sequence[str],
     leaves = jax.tree.leaves(answers)
     nbuf = len(leaves)
     slots = leaves[0].shape[0] * leaves[0].shape[1] if leaves else 0
-    stats = ExchangeStats(stats.calls + jnp.int32(nbuf * h),
-                          stats.items + items,
-                          stats.bytes + jnp.float32(by * h),
-                          stats.slots + jnp.float32(slots))
+    stats = stats._replace(calls=stats.calls + jnp.int32(nbuf * h),
+                           items=stats.items + items,
+                           bytes=stats.bytes + jnp.float32(by * h),
+                           slots=stats.slots + jnp.float32(slots))
     return out, stats
+
+
+class ScatterResult(NamedTuple):
+    """Receive-side view of one ``scatter_updates`` multicast.  There is
+    no reply leg, so no routing bookkeeping is carried — consumers apply
+    the received updates in place (e.g. scatter new labels into a ghost
+    table) and only need the source-major buffers plus the overflow
+    contract shared with ``routed_exchange``."""
+    recv: jax.Array      # [p, C, ...] received payloads (source-major)
+    recv_ok: jax.Array   # [p, C] bool — slot holds a delivered item
+    sent_ok: jax.Array   # [L, p] bool — (item, dest) copy was in capacity
+    overflow: jax.Array  # [] int32 dropped (item, dest) copies, psum'd
+    stats: Optional[ExchangeStats] = None
+
+
+def scatter_updates(payload, dest_mask: jax.Array, valid: jax.Array,
+                    capacity: int, axis_names: Sequence[str],
+                    schedule: str = "grid",
+                    stats: Optional[ExchangeStats] = None) -> ScatterResult:
+    """Multicast ``payload[i]`` to every shard set in bitmask ``dest_mask[i]``.
+
+    The push-style dual of ``routed_exchange``: no request leg, no reply
+    routing — item ``i`` is copied into the send row of every
+    destination shard ``s`` with ``dest_mask[i] >> s & 1`` set (so one
+    changed ghost label reaches all its subscribers in a single
+    exchange).  ``dest_mask`` is an int32 bitmask, which caps the mesh
+    at 31 shards for this primitive (bit 31 would be the int32 sign
+    bit); callers gate on that and fall back to per-destination
+    request/reply beyond it.  Per-destination positions come from one
+    column-wise cumsum over the [L, p] copy mask — an O(L·p) transient,
+    the price of static shapes for a multicast (documented honestly in
+    docs/ARCHITECTURE.md).
+
+    Overflow accounting matches ``routed_exchange``: copies beyond
+    ``capacity`` are dropped *per destination* and counted, never
+    silent.  ``stats`` accrues one logical exchange (payload leaves + 1
+    mask buffer, ``p * capacity`` slots); the ghost-specific ``pushed``
+    counter is the caller's to bump — this primitive is generic.
+    """
+    names = tuple(axis_names)
+    p = 1
+    for n in names:
+        p *= compat.axis_size(n)
+    L = dest_mask.shape[0]
+    want = valid[:, None] & (
+        (dest_mask[:, None] >> jnp.arange(p, dtype=jnp.int32)) & 1 > 0)
+    pos = jnp.cumsum(want.astype(jnp.int32), axis=0) - 1     # [L, p]
+    ok = want & (pos < capacity)
+    d_idx = jnp.where(ok, jnp.arange(p, dtype=jnp.int32)[None, :], p)
+    s_idx = jnp.where(ok, pos, 0)
+
+    def scatter(x):
+        buf = compat.vary(jnp.zeros((p, capacity) + x.shape[1:], x.dtype),
+                          names)
+        rep = jnp.broadcast_to(x[:, None], (L, p) + x.shape[1:])
+        return buf.at[d_idx, s_idx].set(rep, mode="drop")
+
+    send = jax.tree.map(scatter, payload)
+    send_mask = compat.vary(jnp.zeros((p, capacity), bool), names).at[
+        d_idx, s_idx].set(ok, mode="drop")
+    recv = jax.tree.map(lambda b: all_to_all_nd(b, names, schedule), send)
+    recv_ok = all_to_all_nd(send_mask, names, schedule)
+    overflow = lax.psum(jnp.sum((want & ~ok).astype(jnp.int32)), names)
+    if stats is not None:
+        h = _hops(names, schedule)
+        nbuf = len(jax.tree.leaves(payload)) + 1  # + validity mask
+        by = _buffer_bytes(send) + _buffer_bytes(send_mask)
+        items = lax.psum(jnp.sum(ok.astype(jnp.float32)), names)
+        stats = stats._replace(calls=stats.calls + jnp.int32(nbuf * h),
+                               items=stats.items + items,
+                               bytes=stats.bytes + jnp.float32(by * h),
+                               slots=stats.slots + jnp.float32(p * capacity))
+    return ScatterResult(recv, recv_ok, ok, overflow, stats)
 
 
 def request_reply(request, dest: jax.Array, valid: jax.Array,

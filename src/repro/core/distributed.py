@@ -59,13 +59,23 @@ class CommStats(NamedTuple):
     combine); the two one-off result reductions (weight, count) are
     excluded.  The replicated engine counts its dense allreduces, the
     sharded engine counts its routed all-to-alls — same fields, so
-    benchmarks can compare the engines like-for-like.  All four are
+    benchmarks can compare the engines like-for-like.  All are
     device-invariant scalars (out_spec P()).
+
+    ``hits``/``misses``/``pushed`` mirror the sharded engine's
+    ghost-label-cache counters (``comm/exchange.py: ExchangeStats`` has
+    the field-by-field units; ``misses`` doubles as the routed
+    endpoint-lookup item count when the cache is off).  They default to
+    0 so the replicated engine — which has no routed lookups — keeps
+    constructing the 4-field view unchanged.
     """
     calls: jax.Array   # [] int32 — collective invocations
     items: jax.Array   # [] f32 — payload items moved (n-vector: n items)
     bytes: jax.Array   # [] f32 — payload bytes moved
     rounds: jax.Array  # [] int32 — Borůvka rounds executed
+    hits: jax.Array = np.float32(0.0)    # [] f32 — ghost-cache hits
+    misses: jax.Array = np.float32(0.0)  # [] f32 — routed lookup items
+    pushed: jax.Array = np.float32(0.0)  # [] f32 — dirty labels pushed
 
 
 class DistGraph(NamedTuple):

@@ -53,6 +53,47 @@ the measured all-to-all / routed-volume deltas):
              lookup of the contracted parent array.  Slots whose
              endpoints resolve to the same component join the persistent
              ``dead`` mask and stop generating requests and candidates.
+             With ``relabel_skip=True`` (ISSUE 4) a vertex whose label
+             is a component that chose no edge this round is **settled**
+             — such a component has no alive incident edge, so neither
+             it nor anything merging into it can ever change again (a
+             choosing neighbour would have handed it a candidate) — and
+             stops requesting for the rest of the level, mirroring
+             CONTRACT's self-parent filter; the shrinking driver drops
+             the RELABEL capacity below vps accordingly.
+
+Ghost-vertex label cache (ISSUE 4 tentpole, ``ghost_cache=True`` by
+default; the paper's ghost vertices, Section IV): the two per-round
+endpoint lookups are the dominant routed volume once MINEDGES is
+aggregated, and the ``v`` column barely coalesces in slot order (runs of
+equal v are short after the lexicographic (u, v) sort).  Two changes:
+
+  * a **v-sorted secondary index** (``VIndex``: a per-shard permutation
+    sorting the v column, plus ``kernels/segmin run_metadata`` over the
+    permuted view) makes *both* endpoint columns coalesce to one request
+    per distinct remote vertex — used by the coalesced lookup path even
+    with the cache off;
+  * each shard keeps **ghost tables** ``gu``/``gv`` (cached label per
+    distinct endpoint value, sized by the host from the distinct-value
+    run counts), filled once at setup by live-gated coalesced lookups
+    (all-dead runs are never read again, so never filled), after which
+    each shard subscribes — one row per **distinct cached component
+    root** — with the roots' owners.  Every round the endpoint labels
+    are read locally from the tables (cache *hits*), and after the
+    contraction each owner multicasts the **root deltas**
+    ``(c, parent[c])`` for exactly the merged roots to root ``c``'s
+    subscribers (``scatter_updates``, the dirty push); receivers
+    rewrite entries by value, and the subscriber bitmasks are forwarded
+    to the surviving roots' owners so subscriptions merge along with
+    the components.  The dirty set is the merged-root set, which
+    shrinks geometrically with the alive-component count — unlike
+    per-vertex label churn, which stays flat while a giant component
+    absorbs the graph — so steady-state lookup traffic is O(Δroots)
+    instead of O(edges/shard) per round.  ``ExchangeStats`` carries
+    hit/miss/push counters so the delta is measurable
+    (benchmarks/sharded_scaling.py).  The int32 subscriber bitmask caps
+    the scheme at 31 shards; larger meshes fall back to coalesced
+    lookups automatically.
 
 Shrinking capacity schedule (ISSUE 3 tentpole, ``shrink_capacities``,
 default on): with flat capacities every round ships MINEDGES buffers
@@ -101,7 +142,7 @@ from __future__ import annotations
 import functools
 import math
 from functools import partial
-from typing import List, Optional, Sequence, Tuple
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -111,11 +152,49 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.comm.exchange import (ExchangeStats, _hops, reply,
-                                 routed_exchange)
+                                 routed_exchange, scatter_updates)
 from repro.core.distributed import (ESENT, CommStats, DistGraph,
                                     _doubling_iters, _weight_pivots,
                                     quantize_capacity)
 from repro.kernels.segmin.ops import run_metadata
+
+# the ghost push encodes subscriber sets as int32 bitmasks; bit 31 is
+# the sign bit, so meshes beyond this fall back to coalesced lookups
+MAX_GHOST_SHARDS = 31
+
+
+class VIndex(NamedTuple):
+    """Per-shard v-sorted secondary index (ISSUE 4).
+
+    The edge slice is lexicographically (u, v)-sorted, so the v column's
+    equal-value runs are short in slot order.  ``perm`` sorts the local
+    slots by ``where(valid, v, n)`` (padding keys to the tail), ``runs``
+    is ``run_metadata`` over that permuted view (one maximal run per
+    distinct v), ``key`` the permuted key column, and ``rank`` maps each
+    original slot to its distinct-v rank — the index into the v ghost
+    table.  Static per solve: build once, reuse every round.
+    """
+    perm: jax.Array   # [cap] int32 — local permutation (v-sorted order)
+    rank: jax.Array   # [cap] int32 — slot -> distinct-v rank
+    runs: Tuple[jax.Array, jax.Array, jax.Array]  # run_metadata(key)
+    key: jax.Array    # [cap] int32 — permuted keys (invalid slots = n)
+
+
+def _build_v_index(v: jax.Array, valid: jax.Array, n: int,
+                   names: Tuple[str, ...],
+                   perm: Optional[jax.Array] = None) -> VIndex:
+    """Build the v-sorted index; ``perm`` lets the host-orchestrated
+    driver pass its precomputed per-shard argsort (any stable sort of
+    the same keys yields identical runs/ranks, so host and device
+    constructions are interchangeable)."""
+    cap = v.shape[0]
+    key0 = jnp.where(valid, v, jnp.int32(n))
+    if perm is None:
+        perm = jnp.argsort(key0, stable=True).astype(jnp.int32)
+    runs = run_metadata(key0, perm=perm)
+    rank = compat.vary(jnp.zeros((cap,), jnp.int32), names
+                       ).at[perm].set(runs[2])
+    return VIndex(perm, rank, runs, key0[perm])
 
 
 # --------------------------------------------------------------------------
@@ -125,7 +204,8 @@ from repro.kernels.segmin.ops import run_metadata
 def _sharded_lookup(table: jax.Array, vids: jax.Array, valid: jax.Array,
                     vps: int, capacity: int, axes: Tuple[str, ...],
                     schedule: str = "grid",
-                    stats: Optional[ExchangeStats] = None):
+                    stats: Optional[ExchangeStats] = None,
+                    count_misses: bool = False):
     """Resolve ``table[vids[i]]`` where ``table`` is 1D-sharded by id.
 
     ``table`` is this shard's [vps] slice of a global [p * vps] int32
@@ -135,17 +215,46 @@ def _sharded_lookup(table: jax.Array, vids: jax.Array, valid: jax.Array,
     exchange).  Returns (values [L], ok [L], overflow) — entries with
     ``ok`` False overflowed the exchange and carry garbage; with
     ``stats`` the updated accumulator is appended to the tuple.
+    ``count_misses`` books the request items under ``stats.misses`` too
+    (endpoint-lookup call sites only — with no ghost cache every
+    endpoint lookup is a miss; CONTRACT/RELABEL lookups never count).
     """
     names = tuple(axes)
+    if stats is not None:
+        return _lookup_request_reply(table, vids, valid, vps, capacity,
+                                     names, schedule, stats,
+                                     count_misses=count_misses)
     base = lax.axis_index(names) * vps
     ex = routed_exchange(vids, vids // vps, valid, capacity, names,
+                         schedule)
+    off = jnp.clip(ex.recv - base, 0, vps - 1)
+    answers = jnp.where(ex.recv_ok, table[off], jnp.int32(-1))
+    out = reply(ex, answers, names, schedule)
+    return out, ex.sent_ok, ex.overflow
+
+
+def _lookup_request_reply(table: jax.Array, vids: jax.Array,
+                          req: jax.Array, vps: int, capacity: int,
+                          names: Tuple[str, ...], schedule: str,
+                          stats: ExchangeStats,
+                          count_misses: bool = True):
+    """One owner-routed label request/reply leg with the miss accounting
+    booked once — the shared core of every lookup/fill variant (only the
+    request-set construction and the answer fan-out differ per caller),
+    so the ``2 * p * capacity``-slots-per-lookup conservation law of
+    ``tests/test_comm.py`` lives in exactly one place.  ``count_misses``
+    is False for the CONTRACT/RELABEL lookups, which are not endpoint
+    misses.  Returns (out [L] per-request answers, sent_ok [L],
+    overflow, stats)."""
+    base = lax.axis_index(names) * vps
+    items0 = stats.items
+    ex = routed_exchange(vids, vids // vps, req, capacity, names,
                          schedule, stats=stats)
     off = jnp.clip(ex.recv - base, 0, vps - 1)
     answers = jnp.where(ex.recv_ok, table[off], jnp.int32(-1))
-    if stats is None:
-        out = reply(ex, answers, names, schedule)
-        return out, ex.sent_ok, ex.overflow
     out, st = reply(ex, answers, names, schedule, stats=ex.stats)
+    if count_misses:
+        st = st._replace(misses=st.misses + (ex.stats.items - items0))
     return out, ex.sent_ok, ex.overflow, st
 
 
@@ -155,28 +264,253 @@ def _coalesced_lookup(table: jax.Array, vids: jax.Array, runs,
                       stats: ExchangeStats):
     """``_sharded_lookup`` with request coalescing over equal-vid runs.
 
-    The edge array is lexicographically sorted, so consecutive slots
-    request the same vertex ~avg-degree times.  ``runs`` is the
-    precomputed ``run_metadata(vids)`` (static across rounds): only run
-    heads whose run contains at least one valid slot send a request, and
-    the reply fans back out locally through the head index.  Divides
-    routed lookup items by the average run length and lets ``capacity``
-    shrink to the run-head bound (``default_lookup_capacity``), with the
-    same exact overflow accounting — a dropped head drops its whole run,
-    reported through ``overflow``/``ok``.
+    ``runs`` is the precomputed ``run_metadata`` over ``vids`` (static
+    across rounds): only run heads whose run contains at least one valid
+    slot send a request, and the reply fans back out locally through the
+    head index.  Divides routed lookup items by the average run length
+    and lets ``capacity`` shrink to the run-head bound
+    (``default_lookup_capacity``), with the same exact overflow
+    accounting — a dropped head drops its whole run, reported through
+    ``overflow``/``ok``.  ``runs`` must not be ``None`` — callers
+    dispatch to the uncoalesced ``_sharded_lookup`` themselves (see
+    ``_round_body``), so the stats accumulator is threaded through
+    exactly one path.
     """
     names = tuple(axes)
     head, head_idx, run_id = runs
     any_valid = compat.vary(jnp.zeros(valid.shape, bool), names
                             ).at[run_id].max(valid)
     req = head & any_valid[run_id]
+    out_h, ok_h, ovf, st = _lookup_request_reply(
+        table, vids, req, vps, capacity, names, schedule, stats)
+    return out_h[head_idx], valid & ok_h[head_idx], ovf, st
+
+
+def _vsorted_lookup(table: jax.Array, vidx: VIndex, valid: jax.Array,
+                    vps: int, capacity: int, axes: Tuple[str, ...],
+                    schedule: str, stats: ExchangeStats):
+    """Coalesced lookup of the v endpoint through the v-sorted index.
+
+    One request per distinct-v run containing a valid slot (the
+    run-length win the slot-order v column cannot give); the answers fan
+    out per run and back to original slot order through ``vidx.rank``.
+
+    Loop-closure note: this deliberately never gathers/scatters through
+    ``vidx.perm`` — run membership comes from a ``rank``-keyed scatter
+    and the fan-out from a run-indexed gather.  A closed-over
+    ``argsort`` permutation consumed by gathers *inside* a
+    ``lax.while_loop`` body miscompiles on the JAX 0.4.x CPU backend
+    (requests silently land on wrong rows; caught as phantom overflow by
+    the capacity accounting), while the derived run/rank arrays are
+    safe — so the round-path code only ever touches the latter.
+    """
+    names = tuple(axes)
+    head, head_idx, run_id = vidx.runs
+    L = valid.shape[0]
+    run_live = compat.vary(jnp.zeros((L,), bool), names
+                           ).at[vidx.rank].max(valid)
+    req = head & run_live[run_id]
+    out_h, ok_h, ovf, st = _lookup_request_reply(
+        table, vidx.key, req, vps, capacity, names, schedule, stats)
+    idx = jnp.where(head, run_id, L)  # answers live at run heads
+    ra = compat.vary(jnp.full((L + 1,), -1, jnp.int32), names
+                     ).at[idx].set(out_h, mode="drop")
+    okr = compat.vary(jnp.zeros((L + 1,), bool), names
+                      ).at[idx].set(ok_h, mode="drop")
+    return (ra[vidx.rank], valid & okr[vidx.rank], ovf, st)
+
+
+# --------------------------------------------------------------------------
+# ghost-vertex label cache (ISSUE 4)
+# --------------------------------------------------------------------------
+
+def _ghost_fill(table: jax.Array, vids: jax.Array, runs,
+                valid: jax.Array, G: int, vps: int, capacity: int,
+                axes: Tuple[str, ...], schedule: str,
+                stats: ExchangeStats):
+    """Fill one ghost table: one coalesced request per distinct-value
+    run with >= 1 valid slot (exactly the miss set — booked under
+    ``stats.misses``).  Returns (ghost [G] labels by run rank, overflow,
+    stats); unrequested/unanswered entries hold -1 and stay unread.
+    """
+    names = tuple(axes)
+    head, head_idx, run_id = runs
+    any_valid = compat.vary(jnp.zeros(valid.shape, bool), names
+                            ).at[run_id].max(valid)
+    req = head & any_valid[run_id]
+    out, ok, ovf, st = _lookup_request_reply(
+        table, vids, req, vps, capacity, names, schedule, stats)
+    ghost = compat.vary(jnp.full((G,), -1, jnp.int32), names).at[
+        jnp.where(ok, run_id, G)].set(out, mode="drop")
+    return ghost, ovf, st
+
+
+def _bit_or_scatter(mask: jax.Array, idx: jax.Array, bits: jax.Array,
+                    ok: jax.Array, p: int,
+                    names: Tuple[str, ...]) -> jax.Array:
+    """``mask[idx[i]] |= bits[i]`` for ok items (drop row = len(mask)).
+
+    jnp scatters have no bitwise-or mode, so the int32 bitmasks are
+    expanded to [*, p] bool, combined with a scatter-max per bit, and
+    repacked — p <= MAX_GHOST_SHARDS keeps this tiny.
+    """
+    L = mask.shape[0]
+    lanes = jnp.arange(p, dtype=jnp.int32)
+    cur = ((mask[:, None] >> lanes) & 1) > 0
+    add = (((bits[:, None] >> lanes) & 1) > 0) & ok[:, None]
+    pad = compat.vary(jnp.zeros((1, p), bool), names)
+    acc = jnp.concatenate([cur, pad]).at[jnp.where(ok, idx, L)].max(add)
+    return jnp.sum(acc[:L].astype(jnp.int32) << lanes, axis=1)
+
+
+def _ghost_setup(u, v, valid, live, lab, vperm, n: int, vps: int,
+                 Gu: int, Gv: int, cap_fill_u: int, cap_fill_v: int,
+                 cap_sub: int, axes: Tuple[str, ...], schedule: str,
+                 stats: ExchangeStats):
+    """Build the per-shard ghost state: tables + root subscriptions.
+
+    Runs once per solve, after preprocessing.  The two coalesced fills
+    (one request per distinct live endpoint) are the only vertex-grained
+    lookups the ghost engine ever pays; afterwards each shard sends one
+    *root subscription* per distinct cached component root — the owners
+    accumulate per-owned-root subscriber bitmasks (``root_subs``), which
+    the per-round delta push keys on.  Everything is gated on ``live``
+    (``valid`` minus the preprocessing dead mask, ignoring any filter
+    window): an all-dead run can never be read again — the dead mask
+    only grows — so filling or subscribing it would only fatten the
+    push.  Returns (gstate, vidx, runs_u, overflow, stats) with
+    ``gstate = (gu, gv, root_subs)``.
+    """
+    names = tuple(axes)
+    big = jnp.int32(n)
+    runs_u = run_metadata(u)
+    vu = jnp.where(valid, u, big)
+    vidx = _build_v_index(v, valid, n, names, perm=vperm)
+    gu, o1, st = _ghost_fill(lab, vu, runs_u, live, Gu, vps,
+                             cap_fill_u, names, schedule, stats)
+    gv, o2, st = _ghost_fill(lab, vidx.key, vidx.runs,
+                             live[vidx.perm], Gv, vps,
+                             cap_fill_v, names, schedule, st)
+    # one subscription per distinct cached root: sort the concatenated
+    # cached labels (straight-line argsort — outside any loop, see the
+    # loop-closure note on _vsorted_lookup) and send the run heads
+    p = 1
+    for a in names:
+        p *= compat.axis_size(a)
+    cat = jnp.concatenate([gu, gv])
+    cat = jnp.sort(jnp.where(cat >= 0, cat, ESENT))  # unfilled to the pad
+    head = jnp.concatenate([compat.vary(jnp.ones((1,), bool), names),
+                            cat[1:] != cat[:-1]])
+    req = head & (cat < ESENT)
+    mybit = jnp.int32(1) << lax.axis_index(names).astype(jnp.int32)
+    items0 = st.items
+    ex = routed_exchange((cat, jnp.broadcast_to(mybit, cat.shape)),
+                         cat // vps, req, cap_sub, names, schedule,
+                         stats=st)
+    st = ex.stats
+    # subscription maintenance rides the push counter so misses + pushed
+    # stays the honest total ghost overhead
+    st = st._replace(pushed=st.pushed + (st.items - items0))
     base = lax.axis_index(names) * vps
-    ex = routed_exchange(vids, vids // vps, req, capacity, names,
-                         schedule, stats=stats)
+    rvid = ex.recv[0].reshape(-1)
+    rbit = ex.recv[1].reshape(-1)
+    okr = ex.recv_ok.reshape(-1)
+    root_subs = _bit_or_scatter(
+        compat.vary(jnp.zeros((vps,), jnp.int32), names),
+        rvid - base, rbit, okr, p, names)
+    return ((gu, gv, root_subs), vidx, runs_u, o1 + o2 + ex.overflow,
+            st)
+
+
+def _ghost_push(gstate, parent: jax.Array, vps: int, capacity: int,
+                axes: Tuple[str, ...], schedule: str,
+                stats: ExchangeStats):
+    """Root-delta push: invalidate-by-replacement of ghost entries.
+
+    The dirty set is keyed by **component root**, not vertex: a ghost
+    entry holds its vertex's current root, and this round's contraction
+    rewrote exactly the roots with ``parent[c] != c`` — a set that
+    shrinks geometrically with the alive-component count, unlike the
+    per-vertex label churn (which stays flat while a giant component
+    absorbs the graph).  Each owner multicasts ``(c, parent[c])`` to the
+    subscribers of root ``c`` (``scatter_updates``); receivers rewrite
+    every table entry whose *value* is ``c`` via one binary search per
+    entry.  Subscriptions merge along with the components: the owner
+    forwards ``root_subs[c]`` to ``owner(parent[c])``, where it ORs into
+    the surviving root's bitmask (``parent`` is fully contracted, so
+    forwards always target final roots, never chain).  Overflow follows
+    the exchange contract — counted, never silent; a dropped copy would
+    leave a stale ghost entry, so results are only trusted at overflow
+    0, same as every exchange.
+    """
+    names = tuple(axes)
+    p = 1
+    for a in names:
+        p *= compat.axis_size(a)
+    gu, gv, root_subs = gstate
+    base = lax.axis_index(names) * vps
+    vid = base + jnp.arange(vps, dtype=jnp.int32)
+    dirty = (parent != vid) & (root_subs != 0)
+    items0 = stats.items
+    upd = scatter_updates((vid, parent), root_subs, dirty, capacity,
+                          names, schedule, stats=stats)
+    # subscriber sets follow the merge: bits of c move to owner(parent[c])
+    fx = routed_exchange((parent, root_subs), parent // vps, dirty,
+                         capacity, names, schedule, stats=upd.stats)
+    st = fx.stats
+    st = st._replace(pushed=st.pushed + (st.items - items0))
+    root_subs = jnp.where(dirty, 0, root_subs)  # merged c: no longer a root
+    root_subs = _bit_or_scatter(root_subs,
+                                fx.recv[0].reshape(-1) - base,
+                                fx.recv[1].reshape(-1),
+                                fx.recv_ok.reshape(-1), p, names)
+    # apply the received (old root -> new root) pairs by value
+    okp = upd.recv_ok.reshape(-1)
+    rold = jnp.where(okp, upd.recv[0].reshape(-1), ESENT)
+    rnew = upd.recv[1].reshape(-1)
+    order = jnp.argsort(rold)  # in-body argsort: loop-safe
+    sc = rold[order]
+    sr = rnew[order]
+    M = sc.shape[0]
+
+    def apply(gt):
+        j = jnp.clip(jnp.searchsorted(sc, gt), 0, M - 1)
+        hit = sc[j] == gt  # unfilled entries are -1: never match
+        return jnp.where(hit, sr[j], gt)
+
+    return ((apply(gu), apply(gv), root_subs),
+            upd.overflow + fx.overflow, st)
+
+
+def _relabel_lookup(parent: jax.Array, has: jax.Array, lab: jax.Array,
+                    settled: jax.Array, vps: int, capacity: int,
+                    axes: Tuple[str, ...], schedule: str,
+                    stats: ExchangeStats):
+    """RELABEL with the settled-vertex skip (ISSUE 4 satellite).
+
+    Unsettled owned vertices ask ``owner(lab[x])`` for the contracted
+    parent *and* whether that component chose an edge this round.  A
+    component that chose nothing has no alive incident edge, so no
+    neighbour can ever merge into it either (it would have received that
+    candidate) — its members' labels are final for the level and stop
+    requesting, which is what lets the shrinking driver drop the RELABEL
+    capacity below vps (the dense analogue of CONTRACT's self-parent
+    filter).  Returns (lab, settled, overflow, stats).
+    """
+    names = tuple(axes)
+    base = lax.axis_index(names) * vps
+    req = ~settled
+    ex = routed_exchange(lab, lab // vps, req, capacity, names, schedule,
+                         stats=stats)
     off = jnp.clip(ex.recv - base, 0, vps - 1)
-    answers = jnp.where(ex.recv_ok, table[off], jnp.int32(-1))
-    out_h, st = reply(ex, answers, names, schedule, stats=ex.stats)
-    return out_h[head_idx], valid & ex.sent_ok[head_idx], ex.overflow, st
+    ans_lab = jnp.where(ex.recv_ok, parent[off], jnp.int32(-1))
+    ans_cho = jnp.where(ex.recv_ok, has[off], False)
+    (out_lab, out_cho), st = reply(ex, (ans_lab, ans_cho), names,
+                                   schedule, stats=ex.stats)
+    okr = req & ex.sent_ok
+    lab = jnp.where(okr, out_lab, lab)
+    settled = settled | (okr & ~out_cho)
+    return lab, settled, ex.overflow, st
 
 
 def _sharded_preprocess(u, v, w, eid, valid, n: int, vps: int,
@@ -525,10 +859,12 @@ def _sharded_contract(has, other, n: int, vps: int, capacity: int,
 
 
 def _round_body(u, v, w, eid, live0, lab, mst, dead, runs_u, runs_v,
-                n: int, vps: int, names: Tuple[str, ...], cap_edge: int,
-                cap_label: int, cap_lookup: int, cap_contract: int,
+                vidx, gstate, settled, n: int, vps: int,
+                names: Tuple[str, ...], cap_edge: int, cap_label: int,
+                cap_lookup: int, cap_contract: int, cap_push: int,
                 schedule: str, coalesce: bool, src_only: bool,
-                adaptive: bool, stats: ExchangeStats):
+                adaptive: bool, ghost: bool, relabel_skip: bool,
+                stats: ExchangeStats):
     """One MINEDGES → CONTRACT → RELABEL round over 1D-sharded labels.
 
     Shared verbatim by the fused while_loop engine (flat capacities,
@@ -539,21 +875,59 @@ def _round_body(u, v, w, eid, live0, lab, mst, dead, runs_u, runs_v,
     ``cap_label`` (vps) for it, the shrinking driver the per-owner
     alive-component bound.
 
-    Returns (lab, mst, dead, go, overflow_delta, stats).
+    Endpoint resolution picks one of four paths (same values, different
+    routed volume): ``ghost`` reads both labels from the local ghost
+    tables (cache hits; coherence maintained by the end-of-round dirty
+    push); ``coalesce`` sends one request per equal-vid run — the u
+    column in slot order, the v column through the v-sorted index
+    (``vidx``) or, when only ``runs_v`` is given, in slot order (the
+    PR 3 path, kept reproducible as the ``vsorted_index=False``
+    comparator); the fallback (all None) requests per slot.
+
+    Returns (lab, mst, dead, gstate, settled, go, overflow_delta, stats).
     """
-
-    def lookup_ep(table, runs, vids, live, st):
-        if coalesce:
-            return _coalesced_lookup(table, vids, runs, live, vps,
-                                     cap_lookup, names, schedule, st)
-        return _sharded_lookup(table, vids, live, vps, cap_lookup,
-                               names, schedule, stats=st)
-
     live = live0 & ~dead
-    ru, ok_u, o1, st = lookup_ep(lab, runs_u if coalesce else None, u,
-                                 live, stats)
-    rv, ok_v, o2, st = lookup_ep(lab, runs_v, v, live, st)
-    looked = ok_u & ok_v
+    if ghost:
+        gu, gv = gstate[0], gstate[1]
+        head_u, _, run_id_u = runs_u
+        head_v, _, run_id_v = vidx.runs
+        au = compat.vary(jnp.zeros(live.shape, bool), names
+                         ).at[run_id_u].max(live)
+        # rank-keyed (never perm-keyed: see _vsorted_lookup) run-liveness
+        av = compat.vary(jnp.zeros(live.shape, bool), names
+                         ).at[vidx.rank].max(live)
+        hits = lax.psum(
+            jnp.sum((head_u & au[run_id_u]).astype(jnp.float32))
+            + jnp.sum((head_v & av[run_id_v]).astype(jnp.float32)), names)
+        st = stats._replace(hits=stats.hits + hits)
+        ru = gu[jnp.clip(run_id_u, 0, gu.shape[0] - 1)]
+        rv = gv[jnp.clip(vidx.rank, 0, gv.shape[0] - 1)]
+        looked = live
+        o1 = o2 = jnp.int32(0)
+    else:
+        # dispatch here, not inside _coalesced_lookup: exactly one of
+        # the two paths runs per endpoint, each booking its own slots
+        # once (runs_u may exist for src_only even when coalesce is off)
+        if coalesce and runs_u is not None:
+            ru, ok_u, o1, st = _coalesced_lookup(
+                lab, u, runs_u, live, vps, cap_lookup, names, schedule,
+                stats)
+        else:
+            ru, ok_u, o1, st = _sharded_lookup(
+                lab, u, live, vps, cap_lookup, names, schedule,
+                stats=stats, count_misses=True)
+        if coalesce and vidx is not None:
+            rv, ok_v, o2, st = _vsorted_lookup(
+                lab, vidx, live, vps, cap_lookup, names, schedule, st)
+        elif coalesce and runs_v is not None:
+            rv, ok_v, o2, st = _coalesced_lookup(
+                lab, v, runs_v, live, vps, cap_lookup, names, schedule,
+                st)
+        else:
+            rv, ok_v, o2, st = _sharded_lookup(
+                lab, v, live, vps, cap_lookup, names, schedule,
+                stats=st, count_misses=True)
+        looked = ok_u & ok_v
     # dead-edge retirement: same component now => same forever
     dead = dead | (looked & (ru == rv))
     alive = looked & (ru != rv) & live
@@ -581,49 +955,75 @@ def _round_body(u, v, w, eid, live0, lab, mst, dead, runs_u, runs_v,
         parent, _, o4, st = _sharded_contract(
             has, other, n, vps, cap_contract, names, schedule, adaptive,
             st)
-    lab, _, o5, st = _sharded_lookup(
-        parent, lab, compat.vary(jnp.ones((vps,), bool), names), vps,
-        cap_label, names, schedule, stats=st)
+    if relabel_skip:
+        lab, settled, o5, st = _relabel_lookup(
+            parent, has, lab, settled, vps, cap_label, names, schedule,
+            st)
+    else:
+        lab, _, o5, st = _sharded_lookup(
+            parent, lab, compat.vary(jnp.ones((vps,), bool), names), vps,
+            cap_label, names, schedule, stats=st)
+    o6 = jnp.int32(0)
+    if ghost:
+        gstate, o6, st = _ghost_push(gstate, parent, vps, cap_push,
+                                     names, schedule, st)
     go = lax.psum(jnp.sum(has.astype(jnp.int32)), names) > 0
-    return lab, mst, dead, go, o1 + o2 + o3 + o4 + o5, st
+    return (lab, mst, dead, gstate, settled, go,
+            o1 + o2 + o3 + o4 + o5 + o6, st)
 
 
-def _sharded_rounds(u, v, w, eid, valid, lab, mst, dead, n: int, vps: int,
+def _sharded_rounds(u, v, w, eid, valid, lab, mst, dead, gstate, vidx,
+                    runs_u, runs_v, n: int, vps: int,
                     axes: Tuple[str, ...], active: Optional[jax.Array],
                     max_rounds: int, cap_edge: int, cap_label: int,
-                    cap_lookup: int, overflow, stats: ExchangeStats,
-                    rounds, schedule: str, coalesce: bool, src_only: bool,
-                    adaptive: bool):
+                    cap_lookup: int, cap_push: int, overflow,
+                    stats: ExchangeStats, rounds, schedule: str,
+                    coalesce: bool, src_only: bool, adaptive: bool,
+                    ghost: bool, relabel_skip: bool):
     """Borůvka rounds with 1D-sharded labels (fused while_loop, flat caps).
 
     ``active`` optionally restricts the edge set (the filter levels);
     ``dead`` persists across rounds AND levels (once ``ru == rv`` a slot
-    is dead forever — labels only coarsen).  The loop carry is
-    (lab [vps], mst [cap], dead [cap], go, round, overflow, stats).
+    is dead forever — labels only coarsen), and so does the ghost state
+    — the tables track the *total* label vector, so filter levels reuse
+    them.  ``settled`` is per-level: a new weight window revives edges,
+    so a component that chose nothing last level may choose again.  The
+    loop carry is (lab [vps], mst [cap], dead [cap], gu, gv,
+    settled [vps], go, round, overflow, stats).
     """
     names = tuple(axes)
     live0 = valid if active is None else (valid & active)
-    # run structure of the endpoint arrays is static across rounds
-    # (coalesced lookups need both; src-only candidate aggregation the
-    # source side)
-    runs_u = run_metadata(u) if (coalesce or src_only) else None
-    runs_v = run_metadata(v) if coalesce else None
+    settled0 = compat.vary(jnp.zeros((vps,), bool), names)
+    if ghost:
+        gu0, gv0, rs0 = gstate
+    else:
+        # 1-element placeholders keep one carry structure for both modes
+        gu0 = gv0 = rs0 = compat.vary(jnp.zeros((1,), jnp.int32), names)
 
     def round_(state):
-        lab, mst, dead, _, r, ovf, st = state
-        lab, mst, dead, go, o, st = _round_body(
-            u, v, w, eid, live0, lab, mst, dead, runs_u, runs_v, n, vps,
-            names, cap_edge, cap_label, cap_lookup, cap_label, schedule,
-            coalesce, src_only, adaptive, st)
-        return lab, mst, dead, go, r + 1, ovf + o, st
+        lab, mst, dead, gu, gv, rsubs, settled, _, r, ovf, st = state
+        gs = (gu, gv, rsubs) if ghost else None
+        lab, mst, dead, gs, settled, go, o, st = _round_body(
+            u, v, w, eid, live0, lab, mst, dead, runs_u, runs_v, vidx,
+            gs, settled, n, vps, names, cap_edge, cap_label, cap_lookup,
+            cap_label, cap_push, schedule, coalesce, src_only, adaptive,
+            ghost, relabel_skip, st)
+        if ghost:
+            gu, gv, rsubs = gs
+        return (lab, mst, dead, gu, gv, rsubs, settled, go, r + 1,
+                ovf + o, st)
 
     def cond(state):
-        return state[3] & (state[4] < max_rounds)
+        return state[7] & (state[8] < max_rounds)
 
-    lab, mst, dead, _, r, overflow, stats = lax.while_loop(
+    (lab, mst, dead, gu, gv, rsubs, _, _, r, overflow,
+     stats) = lax.while_loop(
         cond, round_,
-        (lab, mst, dead, jnp.array(True), jnp.int32(0), overflow, stats))
-    return lab, mst, dead, overflow, stats, rounds + r
+        (lab, mst, dead, gu0, gv0, rs0, settled0, jnp.array(True),
+         jnp.int32(0), overflow, stats))
+    if ghost:
+        gstate = (gu, gv, rsubs)
+    return lab, mst, dead, gstate, overflow, stats, rounds + r
 
 
 # --------------------------------------------------------------------------
@@ -634,8 +1034,10 @@ def _sharded_shard_fn(u, v, w, eid, n: int, vps: int,
                       axes: Tuple[str, ...], algorithm: str,
                       num_levels: int, max_rounds: Optional[int],
                       cap_edge: int, cap_label: int, cap_lookup: int,
-                      schedule: str, local_preprocessing: bool,
-                      coalesce: bool, src_only: bool, adaptive: bool):
+                      cap_push: int, schedule: str,
+                      local_preprocessing: bool, coalesce: bool,
+                      src_only: bool, adaptive: bool, ghost: bool,
+                      relabel_skip: bool, vsorted: bool):
     names = tuple(axes)
     valid = jnp.isfinite(w)
     base = lax.axis_index(names) * vps
@@ -658,23 +1060,44 @@ def _sharded_shard_fn(u, v, w, eid, n: int, vps: int,
         pre_mst = compat.vary(jnp.zeros(u.shape, bool), names)
         dead = u == v  # self-loops can never be MSF candidates
 
+    cap = u.shape[0]
+    runs_v = None
+    if ghost:
+        # fused path: ghost tables sized at the safe static bound (one
+        # entry per slot); the shrinking driver sizes them host-exactly
+        gstate, vidx, runs_u, ovf, stats = _ghost_setup(
+            u, v, valid, valid & ~dead, lab, None, n, vps, cap, cap,
+            cap_lookup, cap_lookup, cap_label, names, schedule, stats)
+        overflow += ovf
+    else:
+        gstate = None
+        runs_u = run_metadata(u) if (coalesce or src_only) else None
+        vidx = _build_v_index(v, valid, n, names) \
+            if (coalesce and vsorted) else None
+        runs_v = run_metadata(v) if (coalesce and not vsorted) else None
+
     common = dict(n=n, vps=vps, axes=names, max_rounds=mr,
                   cap_edge=cap_edge, cap_label=cap_label,
-                  cap_lookup=cap_lookup, schedule=schedule,
-                  coalesce=coalesce, src_only=src_only, adaptive=adaptive)
+                  cap_lookup=cap_lookup, cap_push=cap_push,
+                  schedule=schedule, coalesce=coalesce, src_only=src_only,
+                  adaptive=adaptive, ghost=ghost,
+                  relabel_skip=relabel_skip)
     if algorithm == "boruvka":
-        lab, mst, dead, overflow, stats, rounds = _sharded_rounds(
-            u, v, w, eid, valid, lab, mst, dead, active=None,
-            overflow=overflow, stats=stats, rounds=rounds, **common)
+        lab, mst, dead, gstate, overflow, stats, rounds = _sharded_rounds(
+            u, v, w, eid, valid, lab, mst, dead, gstate, vidx, runs_u,
+            runs_v, active=None, overflow=overflow, stats=stats,
+            rounds=rounds, **common)
     elif algorithm == "filter_boruvka":
         pivots = _weight_pivots(w, valid, num_levels, names)
         lo = jnp.float32(-jnp.inf)
         for lvl in range(num_levels):
             hi = pivots[lvl] if lvl < num_levels - 1 else jnp.float32(jnp.inf)
             active = (w > lo) & (w <= hi)
-            lab, mst, dead, overflow, stats, rounds = _sharded_rounds(
-                u, v, w, eid, valid, lab, mst, dead, active=active,
-                overflow=overflow, stats=stats, rounds=rounds, **common)
+            lab, mst, dead, gstate, overflow, stats, rounds = \
+                _sharded_rounds(
+                    u, v, w, eid, valid, lab, mst, dead, gstate, vidx,
+                    runs_u, runs_v, active=active, overflow=overflow,
+                    stats=stats, rounds=rounds, **common)
             lo = hi
     else:
         raise ValueError(algorithm)
@@ -682,7 +1105,8 @@ def _sharded_shard_fn(u, v, w, eid, n: int, vps: int,
     full_mask = mst | pre_mst
     weight = lax.psum(jnp.sum(jnp.where(full_mask, w, 0.0)), names)
     count = lax.psum(jnp.sum(full_mask.astype(jnp.int32)), names)
-    comm = CommStats(stats.calls, stats.items, stats.bytes, rounds)
+    comm = CommStats(stats.calls, stats.items, stats.bytes, rounds,
+                     stats.hits, stats.misses, stats.pushed)
     return full_mask, weight, count, lab, overflow, comm
 
 
@@ -691,15 +1115,18 @@ def _build_sharded_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
                       axes: Tuple[str, ...], algorithm: str,
                       num_levels: int, max_rounds: Optional[int],
                       cap_edge: int, cap_label: int, cap_lookup: int,
-                      schedule: str, local_preprocessing: bool,
-                      coalesce: bool, src_only: bool, adaptive: bool):
+                      cap_push: int, schedule: str,
+                      local_preprocessing: bool, coalesce: bool,
+                      src_only: bool, adaptive: bool, ghost: bool,
+                      relabel_skip: bool, vsorted: bool):
     fn = partial(_sharded_shard_fn, n=n, vps=vps, axes=axes,
                  algorithm=algorithm, num_levels=num_levels,
                  max_rounds=max_rounds, cap_edge=cap_edge,
                  cap_label=cap_label, cap_lookup=cap_lookup,
-                 schedule=schedule,
+                 cap_push=cap_push, schedule=schedule,
                  local_preprocessing=local_preprocessing,
-                 coalesce=coalesce, src_only=src_only, adaptive=adaptive)
+                 coalesce=coalesce, src_only=src_only, adaptive=adaptive,
+                 ghost=ghost, relabel_skip=relabel_skip, vsorted=vsorted)
     spec = P(axes)
     return jax.jit(compat.shard_map(
         fn, mesh=mesh,
@@ -711,6 +1138,14 @@ def _build_sharded_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
 # shrinking-capacity driver: one jitted step per round, host-bounded caps
 # --------------------------------------------------------------------------
 
+_STAT_FIELDS = 7  # calls, items, bytes, slots, hits, misses, pushed
+
+
+def _stat_leaves(st: ExchangeStats):
+    return (st.calls, st.items, st.bytes, st.slots, st.hits, st.misses,
+            st.pushed)
+
+
 def _sharded_prep_shard_fn(u, v, w, eid, n: int, vps: int,
                            axes: Tuple[str, ...], cap_label: int,
                            schedule: str):
@@ -718,7 +1153,7 @@ def _sharded_prep_shard_fn(u, v, w, eid, n: int, vps: int,
     lab, pre_mst, dead0, ovf, st = _sharded_preprocess(
         u, v, w, eid, valid, n, vps, cap_label, tuple(axes), schedule,
         ExchangeStats.zeros())
-    return lab, pre_mst, dead0, ovf, st.calls, st.items, st.bytes, st.slots
+    return (lab, pre_mst, dead0, ovf) + _stat_leaves(st)
 
 
 @functools.lru_cache(maxsize=64)
@@ -730,46 +1165,83 @@ def _build_sharded_prep_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
     spec = P(axes)
     return jax.jit(compat.shard_map(
         fn, mesh=mesh, in_specs=(spec, spec, spec, spec),
-        out_specs=(spec, spec, spec, P(), P(), P(), P(), P())))
+        out_specs=(spec, spec, spec) + (P(),) * (1 + _STAT_FIELDS)))
 
 
-def _sharded_round_shard_fn(u, v, w, eid, lab, mst, dead, lo, hi,
-                            n: int, vps: int, axes: Tuple[str, ...],
-                            cap_edge: int, cap_label: int,
-                            cap_lookup: int, cap_contract: int,
+def _ghost_setup_shard_fn(u, v, w, dead, vperm, lab, n: int, vps: int,
+                          Gu: int, Gv: int, cap_fill_u: int,
+                          cap_fill_v: int, cap_sub: int,
+                          axes: Tuple[str, ...], schedule: str):
+    valid = jnp.isfinite(w)
+    gstate, _, _, ovf, st = _ghost_setup(
+        u, v, valid, valid & ~dead, lab, vperm, n, vps, Gu, Gv,
+        cap_fill_u, cap_fill_v, cap_sub, tuple(axes), schedule,
+        ExchangeStats.zeros())
+    gu, gv, root_subs = gstate
+    return (gu, gv, root_subs, ovf) + _stat_leaves(st)
+
+
+@functools.lru_cache(maxsize=64)
+def _build_ghost_setup_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
+                          axes: Tuple[str, ...], Gu: int, Gv: int,
+                          cap_fill_u: int, cap_fill_v: int, cap_sub: int,
+                          schedule: str):
+    fn = partial(_ghost_setup_shard_fn, n=n, vps=vps, Gu=Gu, Gv=Gv,
+                 cap_fill_u=cap_fill_u, cap_fill_v=cap_fill_v,
+                 cap_sub=cap_sub, axes=axes, schedule=schedule)
+    spec = P(axes)
+    return jax.jit(compat.shard_map(
+        fn, mesh=mesh, in_specs=(spec,) * 6,
+        out_specs=(spec, spec, spec) + (P(),) * (1 + _STAT_FIELDS)))
+
+
+def _sharded_round_shard_fn(u, v, w, eid, vperm, lab, mst, dead, gu, gv,
+                            root_subs, settled, lo, hi, n: int, vps: int,
+                            axes: Tuple[str, ...], cap_edge: int,
+                            cap_label: int, cap_lookup: int,
+                            cap_contract: int, cap_push: int,
                             schedule: str, coalesce: bool,
-                            src_only: bool, adaptive: bool):
+                            src_only: bool, adaptive: bool, ghost: bool,
+                            relabel_skip: bool, vsorted: bool):
     names = tuple(axes)
     valid = jnp.isfinite(w)
     live0 = valid & (w > compat.vary(lo, names)) \
         & (w <= compat.vary(hi, names))
-    runs_u = run_metadata(u) if (coalesce or src_only) else None
-    runs_v = run_metadata(v) if coalesce else None
-    lab, mst, dead, go, ovf, st = _round_body(
-        u, v, w, eid, live0, lab, mst, dead, runs_u, runs_v, n, vps,
-        names, cap_edge, cap_label, cap_lookup, cap_contract, schedule,
-        coalesce, src_only, adaptive, ExchangeStats.zeros())
-    return (lab, mst, dead, go, ovf, st.calls, st.items, st.bytes,
-            st.slots)
+    runs_u = run_metadata(u) if (coalesce or src_only or ghost) else None
+    vidx = _build_v_index(v, valid, n, names, perm=vperm) \
+        if ((coalesce and vsorted) or ghost) else None
+    runs_v = run_metadata(v) if (coalesce and not vsorted) else None
+    gstate = (gu, gv, root_subs) if ghost else None
+    lab, mst, dead, gstate, settled, go, ovf, st = _round_body(
+        u, v, w, eid, live0, lab, mst, dead, runs_u, runs_v, vidx,
+        gstate, settled, n, vps, names, cap_edge, cap_label, cap_lookup,
+        cap_contract, cap_push, schedule, coalesce, src_only, adaptive,
+        ghost, relabel_skip, ExchangeStats.zeros())
+    if ghost:
+        gu, gv, root_subs = gstate
+    return (lab, mst, dead, gu, gv, root_subs, settled, go,
+            ovf) + _stat_leaves(st)
 
 
 @functools.lru_cache(maxsize=256)
 def _build_sharded_round_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
                             axes: Tuple[str, ...], cap_edge: int,
                             cap_label: int, cap_lookup: int,
-                            cap_contract: int, schedule: str,
-                            coalesce: bool, src_only: bool,
-                            adaptive: bool):
+                            cap_contract: int, cap_push: int,
+                            schedule: str, coalesce: bool,
+                            src_only: bool, adaptive: bool, ghost: bool,
+                            relabel_skip: bool, vsorted: bool):
     fn = partial(_sharded_round_shard_fn, n=n, vps=vps, axes=axes,
                  cap_edge=cap_edge, cap_label=cap_label,
                  cap_lookup=cap_lookup, cap_contract=cap_contract,
-                 schedule=schedule, coalesce=coalesce, src_only=src_only,
-                 adaptive=adaptive)
+                 cap_push=cap_push, schedule=schedule, coalesce=coalesce,
+                 src_only=src_only, adaptive=adaptive, ghost=ghost,
+                 relabel_skip=relabel_skip, vsorted=vsorted)
     spec = P(axes)
     return jax.jit(compat.shard_map(
         fn, mesh=mesh,
-        in_specs=(spec, spec, spec, spec, spec, spec, spec, P(), P()),
-        out_specs=(spec, spec, spec) + (P(),) * 6))
+        in_specs=(spec,) * 12 + (P(), P()),
+        out_specs=(spec,) * 7 + (P(),) * (2 + _STAT_FIELDS)))
 
 
 def _host_weight_pivots(w_h: np.ndarray, valid_h: np.ndarray,
@@ -878,6 +1350,127 @@ def _endpoint_lookup_bound(u_h: np.ndarray, v_h: np.ndarray,
                _per_pair_max(sl, v_h[live_h] // vps, p))
 
 
+def _host_v_perm(v_h: np.ndarray, valid_h: np.ndarray, n: int,
+                 p: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Host mirror of ``_build_v_index``: per-shard stable argsort of the
+    big-keyed v column.  Returns (perm [p * cap] int32 — local indices
+    per shard, skey [p * cap] — the sorted keys, padding = n at each
+    shard's tail).  Any stable sort of the same keys yields the same run
+    structure, so host and device indices are interchangeable."""
+    cap = v_h.shape[0] // p
+    key = np.where(valid_h, v_h, n).astype(np.int64).reshape(p, cap)
+    perm = np.argsort(key, axis=1, kind="stable").astype(np.int32)
+    skey = np.take_along_axis(key, perm, axis=1)
+    return perm.reshape(-1), skey.reshape(-1)
+
+
+def _host_run_count_max(heads: np.ndarray, p: int) -> int:
+    """Max per-shard run count — the host-exact ghost-table size."""
+    cap = heads.shape[0] // p
+    return max(1, int(heads.reshape(p, cap).sum(axis=1).max()))
+
+
+def _host_ghost_lists(u_h: np.ndarray, v_h: np.ndarray,
+                      live_h: np.ndarray, p: int) -> List[np.ndarray]:
+    """Per shard: the distinct endpoint vids of its live slots — the
+    host mirror of each shard's filled ghost-entry set (live-gated:
+    all-dead runs are never read again, so they are never filled or
+    subscribed)."""
+    out = []
+    cap = u_h.shape[0] // p
+    for s in range(p):
+        sl = slice(s * cap, (s + 1) * cap)
+        out.append(np.unique(np.concatenate([u_h[sl][live_h[sl]],
+                                             v_h[sl][live_h[sl]]])))
+    return out
+
+
+def _subscribe_capacity_bound(lab_h: np.ndarray,
+                              ghosts: List[np.ndarray], p: int,
+                              vps: int) -> int:
+    """Exact per-(shard, owner) row count of the setup root-subscribe
+    exchange: one row per distinct cached component root per shard."""
+    mx = 1
+    for gh in ghosts:
+        if gh.size:
+            roots = np.unique(lab_h[gh])
+            mx = max(mx, int(np.bincount(roots // vps,
+                                         minlength=p).max()))
+    return mx
+
+
+def _ghost_fill_bounds(u_h: np.ndarray, live_h: np.ndarray,
+                       vperm_h: np.ndarray, skey: np.ndarray, n: int,
+                       p: int, vps: int) -> Tuple[int, int]:
+    """Exact per-(shard, owner) request counts of the two ghost fills:
+    one request per distinct endpoint value with >= 1 live slot (u in
+    slot order, v through the sorted key column)."""
+    cap = u_h.shape[0] // p
+    shard = np.repeat(np.arange(p), cap)
+    head_u, rid_u = _host_run_heads(u_h, p)
+    run_live = np.bincount(rid_u[live_h],
+                           minlength=int(rid_u[-1]) + 1) > 0
+    send_u = head_u & run_live[rid_u]
+    bu = max(1, _per_pair_max(shard[send_u], u_h[send_u] // vps, p))
+    head_v, rid_v = _host_run_heads(skey, p)
+    live_p = np.take_along_axis(live_h.reshape(p, cap),
+                                vperm_h.reshape(p, cap), axis=1
+                                ).reshape(-1)
+    run_live_v = np.bincount(rid_v[live_p],
+                             minlength=int(rid_v[-1]) + 1) > 0
+    send_v = head_v & (skey < n) & run_live_v[rid_v]
+    bv = max(1, _per_pair_max(shard[send_v],
+                              (skey[send_v] // vps).astype(np.int64), p))
+    return bu, bv
+
+
+def _relabel_capacity_bound(lab_h: np.ndarray, settled_h: np.ndarray,
+                            p: int, vps: int) -> int:
+    """Exact per-(shard, owner) RELABEL request count under the
+    settled-vertex skip: vertex x requests from ``owner(lab[x])`` iff it
+    has not yet observed its component choose nothing.  ``settled_h`` is
+    the host mirror of the device mask (identical update rule, so the
+    request sets coincide at overflow 0)."""
+    req = ~settled_h
+    if not req.any():
+        return 1
+    x = np.nonzero(req)[0]
+    return max(1, _per_pair_max(x // vps, lab_h[x] // vps, p))
+
+
+def _push_capacity_bound(lab_h: np.ndarray, ghosts: List[np.ndarray],
+                         choosing: np.ndarray, p: int, vps: int) -> int:
+    """Upper bound on the round's root-delta push and forward rows.
+
+    Only a root that chose an edge this round can merge (dirty roots ⊆
+    choosing), and the device's ``root_subs`` at round start is exactly
+    "shards whose cached entry set contains the root" — which the host
+    reconstructs from the current label table over the static ghost
+    lists, so no incremental mirror of the forwarding is needed.  The
+    bound covers both leg shapes: push copies per (owner shard,
+    subscriber) and forward rows per source shard (a forward's
+    destination is the unknown surviving root's owner, so the per-source
+    total bounds every (source, dest) pair).  Decays geometrically with
+    the alive-component count — the whole point of keying the dirty set
+    by root instead of by vertex."""
+    per_pair = np.zeros((p, p), np.int64)  # [owner, subscriber]
+    subscribed = []
+    for s, gh in enumerate(ghosts):
+        if gh.size == 0:
+            continue
+        roots = np.unique(lab_h[gh])
+        roots = roots[choosing[roots]]
+        if roots.size == 0:
+            continue
+        per_pair[:, s] = np.bincount(roots // vps, minlength=p)
+        subscribed.append(roots)
+    if not subscribed:
+        return 1
+    all_roots = np.unique(np.concatenate(subscribed))
+    fw = int(np.bincount(all_roots // vps, minlength=p).max())
+    return max(1, int(per_pair.max()), fw)
+
+
 def _contract_capacity_bound(ru: np.ndarray, rv: np.ndarray,
                              alive: np.ndarray, vps: int) -> int:
     """Max per-owner count of distinct components incident to candidate
@@ -902,7 +1495,9 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
                             max_rounds: Optional[int], ce_full: int,
                             cl: int, lk_full: int, schedule: str,
                             local_preprocessing: bool, coalesce: bool,
-                            src_only: bool, adaptive: bool,
+                            src_only: bool, adaptive: bool, ghost: bool,
+                            relabel_skip: bool, vsorted: bool,
+                            push_capacity: Optional[int],
                             round_trace: Optional[List[dict]]):
     """Host-orchestrated rounds with per-round shrinking capacities.
 
@@ -916,6 +1511,19 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
     flat-capacity engine; the only observable difference is that a level
     whose host bound hits zero skips its trailing empty round, which can
     only *reduce* the round count.
+
+    Ghost additions (ISSUE 4): the ghost tables are sized host-exactly
+    (max per-shard distinct-endpoint run count), the fills at the exact
+    distinct-value bounds, the per-round root-delta push at the
+    subscribed-choosing-root bound (reconstructed from the label table
+    over the static ghost lists each round), and the RELABEL capacity at
+    the unsettled-request bound (the host mirrors the device's monotone
+    ``settled`` mask with the identical update rule).  A user-pinned
+    ``push_capacity`` below the round's push bound triggers the
+    **graceful exact fallback**: the driver abandons the cache and
+    finishes with exact coalesced lookups — results stay exact at
+    overflow 0, never silently wrong (the fused engine instead reports
+    push overflow, same contract as every exchange).
     """
     p = 1
     for a in axes:
@@ -931,7 +1539,7 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
     hops = _hops(axes, schedule)
 
     overflow = 0
-    acc = np.zeros(4, np.float64)  # calls, items, bytes, slots
+    acc = np.zeros(_STAT_FIELDS, np.float64)
     if local_preprocessing:
         prep = _build_sharded_prep_fn(n, vps, mesh, tuple(axes), cl,
                                       schedule)
@@ -946,6 +1554,35 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
     mst = jnp.zeros((p * cap,), bool)
     dead_h = np.asarray(dead)
 
+    # static host structures: source-run heads (src-only aggregation +
+    # u-side fill bound) and the v-sorted secondary index
+    shard_of = np.repeat(np.arange(p), cap)
+    heads, rid = _host_run_heads(u_h, p)
+    vperm_h, skey = _host_v_perm(v_h, valid_h, n, p)
+    vperm = jnp.asarray(vperm_h.astype(np.int32))
+
+    ghost_on = ghost
+    ghosts = None
+    if ghost_on:
+        live_setup = valid_h & ~dead_h
+        Gu = _host_run_count_max(heads, p)
+        Gv = _host_run_count_max(_host_run_heads(skey, p)[0], p)
+        ghosts = _host_ghost_lists(u_h, v_h, live_setup, p)
+        bu, bv = _ghost_fill_bounds(u_h, live_setup, vperm_h, skey, n,
+                                    p, vps)
+        bs = _subscribe_capacity_bound(np.asarray(lab), ghosts, p, vps)
+        setup = _build_ghost_setup_fn(
+            n, vps, mesh, tuple(axes), Gu, Gv,
+            quantize_capacity(bu, lk_full), quantize_capacity(bv, lk_full),
+            quantize_capacity(bs, vps), schedule)
+        gu, gv, rsubs_dev, ovf, *st = setup(graph.u, graph.v, graph.w,
+                                            dead, vperm, lab)
+        overflow += int(ovf)
+        acc += [float(x) for x in st]
+    else:
+        gu = gv = jnp.zeros((p,), jnp.int32)  # [1] per shard placeholder
+        rsubs_dev = jnp.zeros((p,), jnp.int32)
+
     if algorithm == "boruvka":
         windows = [(-np.inf, np.inf)]
     elif algorithm == "filter_boruvka":
@@ -958,13 +1595,19 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
         raise ValueError(algorithm)
 
     rounds = 0
-    shard_of = np.repeat(np.arange(p), cap)
-    # static per-shard source-run structure (src-only aggregation bound)
-    heads, rid = _host_run_heads(u_h, p)
     for lvl, (lo, hi) in enumerate(windows):
         active_h = valid_h & (w_h > lo) & (w_h <= hi)
+        # settled is per level: a new weight window revives edges
+        settled_dev = jnp.zeros((p * vps,), bool)
+        settled_h = np.zeros(p * vps, bool)
         r = 0
         while r < mr:
+            if overflow:
+                # a user-undersized capacity already dropped items: the
+                # result is unreliable by contract (caller must retry
+                # larger), and garbage labels would poison the host
+                # bounds — stop burning rounds and report
+                break
             live_h = active_h & ~dead_h
             lab_h = np.asarray(lab)
             ru_h = lab_h[u_h]
@@ -976,9 +1619,33 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
             if bound_e == 0:
                 break  # no candidate exists: go would come back False
             ce_r = quantize_capacity(bound_e, ce_full)
-            if coalesce:
+            choosing = np.zeros(p * vps, bool)
+            choosing[np.unique(ru_h[alive_h])] = True
+            ghost_round = ghost_on
+            cp_r = 1
+            if ghost_round:
+                pb = _push_capacity_bound(lab_h, ghosts, choosing, p, vps)
+                cp_r = quantize_capacity(pb, vps) \
+                    if push_capacity is None else int(push_capacity)
+                if cp_r < pb:
+                    # graceful exact fallback: a user-pinned push
+                    # capacity that cannot hold the worst-case dirty set
+                    # would leave stale ghost entries; abandon the cache
+                    # and finish with exact coalesced lookups instead of
+                    # risking a wrong (if reported) answer
+                    ghost_on = ghost_round = False
+                    cp_r = 1
+            coalesce_eff = coalesce or (ghost and not ghost_round)
+            # after a ghost fallback the v-sorted machinery is already
+            # built, so the fallback lookups always use it
+            vsorted_eff = vsorted or (ghost and not ghost_round)
+            if ghost_round:
+                lk_r = 1  # no endpoint lookups are traced
+            elif coalesce_eff:
                 lk_r = quantize_capacity(
-                    default_lookup_capacity(graph, p, n, alive=live_h),
+                    default_lookup_capacity(graph, p, n, alive=live_h,
+                                            vsorted=vsorted_eff,
+                                            vindex=(vperm_h, skey)),
                     lk_full)
             else:
                 lk_r = quantize_capacity(
@@ -986,28 +1653,46 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
                                            p, vps), lk_full)
             con_r = quantize_capacity(
                 _contract_capacity_bound(ru_h, rv_h, alive_h, vps), cl)
+            if relabel_skip:
+                rl_r = quantize_capacity(
+                    _relabel_capacity_bound(lab_h, settled_h, p, vps), cl)
+            else:
+                rl_r = cl
             step = _build_sharded_round_fn(
-                n, vps, mesh, tuple(axes), ce_r, cl, lk_r, con_r,
-                schedule, coalesce, src_only, adaptive)
-            lab, mst, dead, go, ovf, *st = step(
-                graph.u, graph.v, graph.w, graph.eid, lab, mst, dead,
+                n, vps, mesh, tuple(axes), ce_r, rl_r, lk_r, con_r,
+                cp_r, schedule, coalesce_eff, src_only, adaptive,
+                ghost_round, relabel_skip, vsorted_eff)
+            (lab, mst, dead, gu, gv, rsubs_dev, settled_dev, go, ovf,
+             *st) = step(
+                graph.u, graph.v, graph.w, graph.eid, vperm, lab, mst,
+                dead, gu, gv, rsubs_dev, settled_dev,
                 jnp.float32(lo), jnp.float32(hi))
             overflow += int(ovf)
             acc += [float(x) for x in st]
             dead_h = np.asarray(dead)
+            if relabel_skip:
+                # mirror of the device's monotone settled update: a
+                # requesting vertex settles iff its (pre-contraction)
+                # component chose nothing this round
+                settled_h = settled_h | ~choosing[lab_h]
             rounds += 1
             r += 1
             if round_trace is not None:
                 round_trace.append({
                     "round": rounds, "level": lvl,
                     "cap_edge": ce_r, "cap_lookup": lk_r,
-                    "cap_contract": con_r, "alive_bound": bound_e,
+                    "cap_contract": con_r, "cap_relabel": rl_r,
+                    "cap_push": cp_r, "ghost": bool(ghost_round),
+                    "alive_bound": bound_e,
                     "minedges_buffer_bytes": minedges_buffer_bytes(
                         p, ce_r, hops, src_only),
                     "a2a_calls": int(st[0]),
                     "routed_items": float(st[1]),
                     "buffer_bytes": float(st[2]),
                     "buffer_slots": float(st[3]),
+                    "cache_hits": float(st[4]),
+                    "lookup_items": float(st[5]),
+                    "pushed_items": float(st[6]),
                 })
             if not bool(go):
                 break
@@ -1016,7 +1701,9 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
     weight = np.float32(np.sum(w_h[mask], dtype=np.float64))
     count = np.int32(int(mask.sum()))
     comm = CommStats(np.int32(acc[0]), np.float32(acc[1]),
-                     np.float32(acc[2]), np.int32(rounds))
+                     np.float32(acc[2]), np.int32(rounds),
+                     np.float32(acc[4]), np.float32(acc[5]),
+                     np.float32(acc[6]))
     return (jnp.asarray(mask), weight, count, lab, np.int32(overflow),
             comm)
 
@@ -1026,37 +1713,73 @@ def vertices_per_shard(n: int, num_shards: int) -> int:
 
 
 def default_lookup_capacity(graph: DistGraph, num_shards: int, n: int,
-                            alive: Optional[np.ndarray] = None) -> int:
+                            alive: Optional[np.ndarray] = None,
+                            vsorted: bool = True,
+                            vindex: Optional[Tuple[np.ndarray,
+                                                   np.ndarray]] = None
+                            ) -> int:
     """Exact-by-construction capacity for the coalesced endpoint lookups.
 
     One host-side pass over the (already host-built) edge arrays counts,
-    per (shard, owner) pair, the contiguous equal-value runs of each
-    endpoint array — the maximum possible number of coalesced requests
-    any shard sends any owner.  Typically ~edges/(shard·avg_degree)
-    instead of edges/shard, which shrinks the [p, C] lookup buffers by
-    the same factor the coalescing shrinks the routed volume.
+    per (shard, owner) pair, the coalesced requests each endpoint column
+    can send: the u column's contiguous equal-value runs in slot order
+    (u is the lexicographic sort's major key), and — since ISSUE 4 —
+    the v column's runs through the **v-sorted secondary index**
+    (``_host_v_perm``), i.e. one request per distinct v per shard, which
+    is what makes high-locality graphs' lookup buffers shrink on the v
+    side too (the rgg2d gap PR 3 left open).  Typically
+    ~edges/(shard·avg_degree) instead of edges/shard.
 
     With ``alive`` (a [p * cap] bool mask of slots still live) only runs
     containing at least one live slot count — exactly the runs the
     engine's coalesced lookup will send a request for, so the bound
     stays exact.  The shrinking-capacity driver calls this once per
     round with the current dead-edge mask folded in.
+    ``vsorted=False`` bounds the v side by its slot-order runs instead —
+    the PR 3 comparator path (``vsorted_index=False``).  ``vindex``
+    optionally supplies a precomputed ``_host_v_perm`` result — the
+    per-round caller (the shrinking driver) computes it once per solve
+    instead of re-sorting the static v column every round.
     """
     vps = vertices_per_shard(n, num_shards)
     cap = graph.cap_total // num_shards
     shard = np.repeat(np.arange(num_shards), cap)
     live = None if alive is None else np.asarray(alive)
-    mx = 1
-    for arr in (graph.u, graph.v):
-        a = np.asarray(arr)
-        head, rid = _host_run_heads(a, num_shards)
-        send = head
+    u_h = np.asarray(graph.u)
+    head, rid = _host_run_heads(u_h, num_shards)
+    send = head
+    if live is not None:
+        run_live = np.bincount(rid[live],
+                               minlength=int(rid[-1]) + 1) > 0
+        send = head & run_live[rid]
+    mx = max(1, _per_pair_max(shard[send], u_h[send] // vps, num_shards))
+    v_h = np.asarray(graph.v)
+    if not vsorted:
+        head_v, rid_v = _host_run_heads(v_h, num_shards)
+        send_v = head_v
         if live is not None:
-            run_live = np.bincount(rid[live],
-                                   minlength=int(rid[-1]) + 1) > 0
-            send = head & run_live[rid]
-        mx = max(mx, _per_pair_max(shard[send], a[send] // vps,
-                                   num_shards))
+            run_live_v = np.bincount(rid_v[live],
+                                     minlength=int(rid_v[-1]) + 1) > 0
+            send_v = head_v & run_live_v[rid_v]
+        return max(mx, _per_pair_max(shard[send_v], v_h[send_v] // vps,
+                                     num_shards))
+    if vindex is None:
+        valid_h = np.isfinite(np.asarray(graph.w))
+        perm, skey = _host_v_perm(v_h, valid_h, n, num_shards)
+    else:
+        perm, skey = vindex
+    head_v, rid_v = _host_run_heads(skey, num_shards)
+    send_v = head_v & (skey < n)
+    if live is not None:
+        live_p = np.take_along_axis(live.reshape(num_shards, cap),
+                                    perm.reshape(num_shards, cap),
+                                    axis=1).reshape(-1)
+        run_live_v = np.bincount(rid_v[live_p],
+                                 minlength=int(rid_v[-1]) + 1) > 0
+        send_v = send_v & run_live_v[rid_v]
+    mx = max(mx, _per_pair_max(shard[send_v],
+                               (skey[send_v] // vps).astype(np.int64),
+                               num_shards))
     return mx
 
 
@@ -1075,6 +1798,10 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
                             src_only: bool = True,
                             adaptive_doubling: bool = True,
                             shrink_capacities: bool = True,
+                            ghost_cache: bool = True,
+                            relabel_skip: bool = True,
+                            vsorted_index: bool = True,
+                            push_capacity: Optional[int] = None,
                             round_trace: Optional[List[dict]] = None):
     """Run the sharded-label distributed MSF on a mesh.
 
@@ -1089,13 +1816,14 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
         the default capacities); callers passing smaller capacities must
         retry larger on a positive count;
       * ``stats`` is a ``CommStats`` (all-to-all invocations, routed
-        items, buffer bytes, rounds) — the honest comm metric the
+        items, buffer bytes, rounds, plus the ghost cache's
+        hits / misses / pushed triple) — the honest comm metric the
         optimization flags move (benchmarks/sharded_scaling.py).
 
     ``shrink_capacities=True`` (default) runs the host-orchestrated
     per-round capacity schedule: each round's MINEDGES / lookup /
-    contract exchanges are sized from host bounds on the measured
-    dead-edge mask, snapped to the geometric ladder of
+    contract / RELABEL / push exchanges are sized from host bounds on
+    the measured dead-edge mask, snapped to the geometric ladder of
     ``core/distributed.py: shrink_schedule`` — bit-identical results,
     geometrically decaying buffer bytes.  ``round_trace`` (a caller
     list) then receives one dict per round with the chosen capacities
@@ -1103,10 +1831,29 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
     ``make_sharded_mst_step``) and with ``shrink_capacities=False`` the
     fused single-program engine with flat capacities runs instead.
 
+    ``ghost_cache=True`` (default, ISSUE 4) keeps per-shard ghost
+    tables of remote endpoint labels: one coalesced fill at setup
+    (through the v-sorted secondary index, so both endpoint columns
+    coalesce to one request per distinct vertex), local reads every
+    round, and a dirty-label push from the owners after each
+    contraction — steady-state lookup traffic is O(Δlabels).
+    Automatically disabled beyond ``MAX_GHOST_SHARDS`` (int32
+    subscriber bitmask).  ``push_capacity`` pins the push exchange
+    (diagnostics): the shrinking driver falls back to exact coalesced
+    lookups when the pinned value cannot hold a round's dirty bound,
+    the fused engine reports push overflow.  ``relabel_skip=True``
+    stops settled vertices (their component chose no edge — final
+    forever) from re-requesting in RELABEL.  ``vsorted_index=False``
+    restores the slot-order v coalescing of PR 3 (the measured
+    comparator in benchmarks/sharded_scaling.py; no effect with the
+    ghost cache on, which always builds the sorted index).
+
     The flags default to the optimized engine; passing
     ``local_preprocessing=False, coalesce=False, src_only=False,
-    adaptive_doubling=False, shrink_capacities=False`` reproduces the
-    PR 1 baseline exactly.
+    adaptive_doubling=False, shrink_capacities=False, ghost_cache=False,
+    relabel_skip=False`` reproduces the PR 1 baseline exactly, and
+    additionally ``ghost_cache=False, vsorted_index=False`` on top of
+    the defaults reproduces the PR 3 optimized engine.
     """
     axes = tuple(axis_names or mesh.axis_names)
     p = 1
@@ -1114,6 +1861,8 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
         p *= mesh.shape[a]
     vps = vertices_per_shard(n, p)
     cap = graph.cap_total // p
+    if p > MAX_GHOST_SHARDS:
+        ghost_cache = False  # int32 subscriber bitmask limit
     # is-None (not falsy) checks: an explicit 0 must be honored — it
     # yields all-overflow results, which the overflow count reports
     ce = int(cap if edge_capacity is None else edge_capacity)
@@ -1122,19 +1871,23 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
     # lowering (make_sharded_mst_step) fall back to the safe flat bound
     concrete = not isinstance(graph.u, jax.core.Tracer)
     if lookup_capacity is None:
-        lk = default_lookup_capacity(graph, p, n) if (coalesce and concrete) \
-            else ce
+        lk = default_lookup_capacity(
+            graph, p, n, vsorted=vsorted_index or ghost_cache) \
+            if ((coalesce or ghost_cache) and concrete) else ce
     else:
         lk = int(lookup_capacity)
     if shrink_capacities and concrete:
         return _shrinking_capacity_msf(
             graph, n, mesh, axes, algorithm, num_levels, max_rounds, ce,
             cl, lk, schedule, local_preprocessing, coalesce, src_only,
-            adaptive_doubling, round_trace)
+            adaptive_doubling, ghost_cache, relabel_skip, vsorted_index,
+            push_capacity, round_trace)
+    cp = int(vps if push_capacity is None else push_capacity)
     shard_fn = _build_sharded_fn(n, vps, mesh, axes, algorithm, num_levels,
-                                 max_rounds, ce, cl, lk, schedule,
+                                 max_rounds, ce, cl, lk, cp, schedule,
                                  local_preprocessing, coalesce, src_only,
-                                 adaptive_doubling)
+                                 adaptive_doubling, ghost_cache,
+                                 relabel_skip, vsorted_index)
     return shard_fn(graph.u, graph.v, graph.w, graph.eid)
 
 

@@ -11,14 +11,18 @@
 
 Mesh-engine knobs pass through ``**kw``: ``axis_names``, ``max_rounds``,
 ``local_preprocessing``, and for the sharded engine the capacity knobs
-(``edge_capacity`` / ``label_capacity`` / ``lookup_capacity`` — explicit
-undersized values surface as the overflow error below), the comm levers
-(``coalesce``, ``src_only``, ``adaptive_doubling``), and
+(``edge_capacity`` / ``label_capacity`` / ``lookup_capacity`` /
+``push_capacity`` — explicit undersized values surface as the overflow
+error below), the comm levers (``coalesce``, ``src_only``,
+``adaptive_doubling``, ``ghost_cache``, ``relabel_skip``), and
 ``shrink_capacities`` (default on: per-round shrinking exchange
 capacities from host bounds on the dead-edge mask; pass False for the
-fused flat-capacity program, e.g. to compare counters).  The engine
-matrix with when-to-use guidance is in README.md; docs/ARCHITECTURE.md
-maps the knobs to the paper's phases.
+fused flat-capacity program, e.g. to compare counters).  ``ghost_cache``
+(default on) replaces the per-round endpoint lookups with per-shard
+ghost-label tables maintained by a dirty-label push from the owners —
+see core/distributed_sharded.py.  The engine matrix with when-to-use
+guidance is in README.md; docs/ARCHITECTURE.md maps the knobs to the
+paper's phases.
 """
 from __future__ import annotations
 

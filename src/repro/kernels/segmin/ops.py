@@ -21,7 +21,7 @@ from repro.kernels.segmin.ref import (EID_SENTINEL, dense_min_from_candidates,
 from repro.kernels.segmin.segmin import default_interpret, segmin_candidates
 
 
-def run_metadata(values: jax.Array
+def run_metadata(values: jax.Array, perm: Optional[jax.Array] = None
                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Contiguous equal-value run structure of ``values`` ([L]).
 
@@ -32,7 +32,19 @@ def run_metadata(values: jax.Array
     feeds a routed exchange, not a VMEM-resident reduction.  Pure
     shape-of-``values`` metadata: compute it once per edge array and
     reuse across rounds.
+
+    With ``perm`` (an [L] int32 permutation) the runs are computed over
+    the **permuted view** ``values[perm]`` and the returned metadata is
+    in permuted-slot order.  This is the v-sorted secondary index of the
+    sharded MST engine (ISSUE 4): the edge array is lexicographically
+    ``(u, v)``-sorted, so equal-``v`` runs are short in slot order — but
+    over ``perm = argsort(v)`` every distinct ``v`` is one maximal run,
+    and both endpoint columns coalesce to one routed request per
+    distinct vertex.  Callers map per-slot results back through
+    ``out.at[perm].set(permuted_result)``.
     """
+    if perm is not None:
+        values = values[perm]
     L = values.shape[0]
     idx = jnp.arange(L, dtype=jnp.int32)
     head = jnp.concatenate([jnp.ones((1,), bool),

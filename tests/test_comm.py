@@ -156,8 +156,97 @@ print("OK")
 """
 
 
+STATS_CONSERVATION = """
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
+from repro.comm.exchange import (ExchangeStats, reply, routed_exchange,
+                                 scatter_updates)
+
+# counter-conservation audit (ISSUE 4 satellite): one logical
+# request/reply lookup must book its buffer slots EXACTLY once per leg —
+# 2 * p * C total, never more (a double-count would silently inflate the
+# capacity-per-call audit of the shrinking schedule) — and calls/items/
+# bytes must match the closed-form accounting in the ExchangeStats
+# docstring.
+devices = np.array(jax.devices())
+mesh = Mesh(devices, ("data",))
+p, L, C = 8, 64, 16
+rng = np.random.default_rng(3)
+payload = rng.integers(0, 1000, (p * L,)).astype(np.int32)
+dest = rng.integers(0, p, (p * L,)).astype(np.int32)
+valid = rng.random(p * L) < 0.8
+
+def lookup(pl, d, va):
+    st = ExchangeStats.zeros()
+    ex = routed_exchange(pl, d, va, C, ("data",), "grid", stats=st)
+    answers = jnp.where(ex.recv_ok, ex.recv * 2, 0)
+    out, st = reply(ex, answers, ("data",), "grid", stats=ex.stats)
+    delivered = jax.lax.psum(ex.recv_ok.sum(), ("data",))
+    sent = jax.lax.psum(ex.sent_ok.sum(), ("data",))
+    return (st.calls, st.items, st.bytes, st.slots, st.hits, st.misses,
+            st.pushed, ex.overflow, sent, delivered)
+
+f = shard_map(lookup, mesh=mesh, in_specs=(P("data"),) * 3,
+              out_specs=(P(),) * 10)
+calls, items, by, slots, hits, misses, pushed, ovf, sent, delivered = [
+    int(x) if x.dtype != jnp.float32 else float(x)
+    for x in f(jnp.asarray(payload), jnp.asarray(dest),
+               jnp.asarray(valid))]
+# single mesh axis => hops == 1; one i32 payload buffer + the validity
+# mask on the way out, one i32 answer buffer on the way back
+assert calls == (1 + 1) + 1, calls
+# items: requests accepted into send buffers + delivered answer slots
+assert items == sent + delivered, (items, sent, delivered)
+# conservation: within-capacity items all arrive, drops are counted
+assert sent == delivered, (sent, delivered)
+assert sent + ovf == int(valid.sum()), (sent, ovf, int(valid.sum()))
+# THE audit: exactly 2 * p * C slots for the round trip, not 4 * p * C
+assert slots == 2 * p * C, (slots, 2 * p * C)
+# bytes: capacity-padded per-device buffers — (i32 + bool mask) out,
+# i32 answers back (device-invariant static sizes, not psum'd)
+assert by == p * C * (4 + 1) + p * C * 4, by
+# the ghost counters belong to the engine's call sites, not the
+# primitives: a bare exchange must leave them untouched
+assert hits == 0 and misses == 0 and pushed == 0, (hits, misses, pushed)
+
+# scatter_updates (the dirty-label push): multicast conservation — every
+# in-capacity (item, destination-bit) copy is delivered exactly once,
+# drops are reported, and the slot/byte accounting matches one logical
+# exchange of a 1-leaf payload
+mask_bits = rng.integers(0, 2 ** p, (p * L,)).astype(np.int32)
+pvalid = rng.random(p * L) < 0.7
+
+def push(pl, mk, va):
+    upd = scatter_updates(pl, mk, va, C, ("data",), "grid",
+                          stats=ExchangeStats.zeros())
+    st = upd.stats
+    got = jax.lax.psum(jnp.where(upd.recv_ok, upd.recv, 0).sum(), ("data",))
+    sent = jax.lax.psum(jnp.where(upd.sent_ok, pl[:, None], 0).sum(),
+                        ("data",))
+    ndel = jax.lax.psum(upd.recv_ok.sum(), ("data",))
+    nsent = jax.lax.psum(upd.sent_ok.sum(), ("data",))
+    return (upd.overflow, got, sent, ndel, nsent, st.calls, st.items,
+            st.slots)
+
+g = shard_map(push, mesh=mesh, in_specs=(P("data"),) * 3,
+              out_specs=(P(),) * 8)
+ovf, got, sent, ndel, nsent, calls, items, slots = [
+    int(x) if x.dtype != jnp.float32 else float(x)
+    for x in g(jnp.asarray(payload), jnp.asarray(mask_bits),
+               jnp.asarray(pvalid))]
+copies = sum(bin(m).count("1") for m, va in zip(mask_bits, pvalid) if va)
+assert nsent + ovf == copies, (nsent, ovf, copies)
+assert ndel == nsent and got == sent, (ndel, nsent, got, sent)
+assert items == nsent, (items, nsent)
+assert calls == 2, calls          # payload + validity mask, 1 hop
+assert slots == p * C, slots      # one logical exchange, no reply leg
+print("OK")
+"""
+
+
 @pytest.mark.parametrize("name,script", [
-    ("grid_eq", GRID_EQ), ("exchange", EXCHANGE), ("sort", SORT)])
+    ("grid_eq", GRID_EQ), ("exchange", EXCHANGE), ("sort", SORT),
+    ("stats_conservation", STATS_CONSERVATION)])
 def test_comm(name, script):
     out = run_multidevice(script, ndev=8)
     assert "OK" in out

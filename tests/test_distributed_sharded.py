@@ -368,6 +368,103 @@ else:
 """
 
 
+GHOST_CACHE = """
+from jax.sharding import Mesh
+from repro.core import oracle
+from repro.core.distributed import build_dist_graph
+from repro.core.distributed_sharded import distributed_sharded_msf
+from repro.data import generators
+
+p = 8
+mesh = Mesh(np.array(jax.devices()), ("data",))
+u, v, w, n = generators.generate("rgg2d", 512, avg_degree=8.0, seed=7)
+g, cap = build_dist_graph(u, v, w, n, p)
+kmask, kweight = oracle.kruskal(u, v, w, n)
+ksel = np.nonzero(kmask)[0]
+
+def check(res, ctx):
+    assert int(res[4]) == 0, (ctx, int(res[4]))
+    sel = np.unique(np.asarray(g.eid)[np.asarray(res[0])])
+    assert np.array_equal(sel, ksel), (ctx, "edge set differs from oracle")
+
+# (1) ghost on vs off: bit-identical results, and the cache must
+# actually work — hits and pushes > 0, routed endpoint-lookup items
+# (misses + pushed) strictly below the coalesced-only run's misses
+trace = []
+gres = distributed_sharded_msf(g, n, mesh, axis_names=("data",),
+                               round_trace=trace)
+cres = distributed_sharded_msf(g, n, mesh, axis_names=("data",),
+                               ghost_cache=False)
+check(gres, "ghost")
+check(cres, "coalesce")
+assert np.array_equal(np.asarray(gres[0]), np.asarray(cres[0]))
+gst, cst = gres[5], cres[5]
+assert float(gst.hits) > 0 and float(gst.pushed) > 0, (
+    float(gst.hits), float(gst.pushed))
+assert float(cst.hits) == 0 and float(cst.pushed) == 0
+g_lookup = float(gst.misses) + float(gst.pushed)
+assert g_lookup < float(cst.misses), (g_lookup, float(cst.misses))
+
+# (2) per-round trace carries the ghost columns; the dirty push decays
+# with the alive-component count
+assert all("cache_hits" in t and "pushed_items" in t and "cap_push" in t
+           for t in trace), trace[0].keys()
+assert all(t["ghost"] for t in trace)
+pushes = [t["pushed_items"] for t in trace]
+assert pushes[-1] < pushes[0], pushes
+
+# (2b) settled-vertex skip satellite: on a graph where most components
+# finish early the host bound drops the RELABEL capacity below vps.
+# A 10-vertex path strided across the id space (~1 vertex per shard)
+# keeps the solve alive; every other vertex pairs into a single-edge
+# component whose members settle right after round 1 (their component
+# chose nothing), so round 2's unsettled set is ~1 vertex per shard.
+# (On a giant-component graph like rgg2d nothing settles until the
+# end, so the capacity legitimately stays at vps there.)
+ns = 212
+path_ids = np.arange(10, dtype=np.int32) * 21
+rest = np.setdiff1d(np.arange(ns, dtype=np.int32), path_ids)
+m2 = len(rest) // 2 * 2
+su = np.concatenate([path_ids[:-1], rest[:m2:2]]).astype(np.int32)
+sv = np.concatenate([path_ids[1:], rest[1:m2:2]]).astype(np.int32)
+rng = np.random.default_rng(0)
+sw = rng.uniform(1, 9, len(su)).astype(np.float32)
+gs, _ = build_dist_graph(su, sv, sw, ns, p)
+strace = []
+sres = distributed_sharded_msf(gs, ns, mesh, axis_names=("data",),
+                               round_trace=strace)
+assert int(sres[4]) == 0
+skmask, _ = oracle.kruskal(su, sv, sw, ns)
+ssel = np.unique(np.asarray(gs.eid)[np.asarray(sres[0])])
+assert np.array_equal(ssel, np.nonzero(skmask)[0])
+svps = -(-ns // p)
+caps_rel = [t["cap_relabel"] for t in strace]
+assert len(caps_rel) >= 2 and caps_rel[-1] < svps, caps_rel
+
+# (3) fused engine, push pinned to 1: overflow is REPORTED, not silent
+res = distributed_sharded_msf(g, n, mesh, axis_names=("data",),
+                              shrink_capacities=False, push_capacity=1)
+assert int(res[4]) > 0, "undersized push capacity must report overflow"
+
+# (4) shrinking driver, push pinned to 1: graceful exact fallback —
+# the driver abandons the cache instead of risking stale ghosts, so the
+# result stays exact at overflow 0 and the trace shows the switch
+trace = []
+res = distributed_sharded_msf(g, n, mesh, axis_names=("data",),
+                              push_capacity=1, round_trace=trace)
+check(res, "fallback")
+assert np.array_equal(np.asarray(res[0]), np.asarray(cres[0]))
+assert not any(t["ghost"] for t in trace), [t["ghost"] for t in trace]
+
+# (5) undersized lookup capacity also starves the ghost *fills*:
+# reported through the same overflow contract
+res = distributed_sharded_msf(g, n, mesh, axis_names=("data",),
+                              shrink_capacities=False, lookup_capacity=1)
+assert int(res[4]) > 0, "undersized fill capacity must report overflow"
+print("OK")
+"""
+
+
 @pytest.mark.parametrize("name,script", [
     ("lookup_roundtrip", LOOKUP_ROUNDTRIP),
     ("root_mask", ROOT_MASK),
@@ -375,7 +472,8 @@ else:
     ("comm_counters", COMM_COUNTERS),
     ("shrinking_schedule", SHRINKING),
     ("preprocess_bucketed", PREPROCESS_BUCKETED),
-    ("preprocess_peak_memory", PREPROCESS_PEAK_MEMORY)])
+    ("preprocess_peak_memory", PREPROCESS_PEAK_MEMORY),
+    ("ghost_cache", GHOST_CACHE)])
 def test_sharded_internals(name, script):
     out = run_multidevice(script, ndev=8, timeout=900)
     assert "OK" in out

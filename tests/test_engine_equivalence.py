@@ -107,15 +107,27 @@ from repro.core.mst import minimum_spanning_forest
 
 mesh = Mesh(np.array(jax.devices()), ("data",))
 OFF = dict(local_preprocessing=False, coalesce=False, src_only=False,
-           adaptive_doubling=False, shrink_capacities=False)
+           adaptive_doubling=False, shrink_capacities=False,
+           ghost_cache=False, relabel_skip=False)
 COMBOS = [
     dict(OFF),                                           # the PR 1 baseline
     dict(OFF, local_preprocessing=True),
-    dict(OFF, coalesce=True),
+    dict(OFF, coalesce=True),            # incl. the v-sorted index
+    dict(OFF, coalesce=True, vsorted_index=False),  # PR 3 slot-order v
     dict(OFF, src_only=True),
     dict(OFF, adaptive_doubling=True),
     dict(OFF, shrink_capacities=True),   # shrinking schedule alone
-    dict(shrink_capacities=False),       # all PR 2 levers, flat capacities
+    dict(OFF, relabel_skip=True),        # settled-vertex RELABEL skip
+    # the ISSUE 4 ghost_cache x coalesce x shrink_capacities sub-matrix
+    # (the cache replaces the endpoint lookups, so each pairing takes a
+    # genuinely different code path through _round_body)
+    dict(OFF, ghost_cache=True),
+    dict(OFF, ghost_cache=True, coalesce=True),
+    dict(OFF, ghost_cache=True, shrink_capacities=True),
+    dict(OFF, ghost_cache=True, coalesce=True, shrink_capacities=True),
+    dict(ghost_cache=False, vsorted_index=False),  # the PR 3 optimized
+    dict(ghost_cache=False),             # all levers minus the cache
+    dict(shrink_capacities=False),       # all levers, flat capacities
     dict(),                              # everything incl. the schedule
 ]
 
