@@ -232,6 +232,22 @@ def reply(ex: ExchangeResult, answers, axis_names: Sequence[str],
     return out, stats
 
 
+def _mask_to_copies(dest_mask: jax.Array, valid: jax.Array,
+                    p: int) -> jax.Array:
+    """Expand per-item int32 destination bitmasks to the [L, p] copy
+    matrix ``scatter_updates`` routes from: copy (i, s) exists iff item
+    ``i`` is valid and bit ``s`` of ``dest_mask[i]`` is set.
+
+    Pure bit arithmetic, factored out so the width contract is testable
+    without a mesh (tests/test_comm.py): bits 0..30 are usable
+    destinations, bit 31 is the int32 sign bit — which is why callers
+    (the ghost cache) must fall back beyond 31 shards, and why this
+    helper is only ever called with ``p <= 31``.
+    """
+    lanes = jnp.arange(p, dtype=jnp.int32)
+    return valid[:, None] & (((dest_mask[:, None] >> lanes) & 1) > 0)
+
+
 class ScatterResult(NamedTuple):
     """Receive-side view of one ``scatter_updates`` multicast.  There is
     no reply leg, so no routing bookkeeping is carried — consumers apply
@@ -274,8 +290,7 @@ def scatter_updates(payload, dest_mask: jax.Array, valid: jax.Array,
     for n in names:
         p *= compat.axis_size(n)
     L = dest_mask.shape[0]
-    want = valid[:, None] & (
-        (dest_mask[:, None] >> jnp.arange(p, dtype=jnp.int32)) & 1 > 0)
+    want = _mask_to_copies(dest_mask, valid, p)
     pos = jnp.cumsum(want.astype(jnp.int32), axis=0) - 1     # [L, p]
     ok = want & (pos < capacity)
     d_idx = jnp.where(ok, jnp.arange(p, dtype=jnp.int32)[None, :], p)

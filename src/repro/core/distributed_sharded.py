@@ -116,6 +116,18 @@ capacities.  The dominant buffer-bytes term thereby decays geometrically
 across rounds instead of staying flat (EXPERIMENTS.md §Shrinking
 capacity schedule has the measured per-round trajectory).
 
+Plan/execute split (ISSUE 5): the schedule above is also available as
+a first-class value.  ``plan_sharded_msf`` runs the host-interleaved
+driver once as a *measurement backend* and freezes the capacities it
+chose into a serializable ``core/plan.py: RoundPlan``;
+``execute_plan`` / ``distributed_sharded_msf(plan=...)`` /
+``make_sharded_mst_step(plan=...)`` replay the plan as a
+Python-unrolled multi-round program — per-round static capacities, one
+compiled artifact, AOT-lowerable — with ``pad(margin)`` headroom for
+serving and an overflow/residual → replan fallback that keeps the
+never-silent contract.  The dry-run/roofline layer costs a planned
+program's compiled memory and collectives without running it.
+
 Chosen-edge marking: in src-only mode a mutual pair of components
 necessarily chose the *same* edge (each side's minimum bounds the
 other's), and mutuality is exactly the 2-cycle the contraction already
@@ -141,6 +153,7 @@ from __future__ import annotations
 
 import functools
 import math
+import warnings
 from functools import partial
 from typing import List, NamedTuple, Optional, Sequence, Tuple
 
@@ -156,6 +169,7 @@ from repro.comm.exchange import (ExchangeStats, _hops, reply,
 from repro.core.distributed import (ESENT, CommStats, DistGraph,
                                     _doubling_iters, _weight_pivots,
                                     quantize_capacity)
+from repro.core.plan import GhostPlan, RoundPlan, RoundSpec
 from repro.kernels.segmin.ops import run_metadata
 
 # the ghost push encodes subscriber sets as int32 bitmasks; bit 31 is
@@ -1498,7 +1512,8 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
                             src_only: bool, adaptive: bool, ghost: bool,
                             relabel_skip: bool, vsorted: bool,
                             push_capacity: Optional[int],
-                            round_trace: Optional[List[dict]]):
+                            round_trace: Optional[List[dict]],
+                            plan_out: Optional[dict] = None):
     """Host-orchestrated rounds with per-round shrinking capacities.
 
     Runs the same ``_round_body`` as the fused engine, one jitted step
@@ -1524,6 +1539,16 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
     finishes with exact coalesced lookups — results stay exact at
     overflow 0, never silently wrong (the fused engine instead reports
     push overflow, same contract as every exchange).
+
+    Planner backend (ISSUE 5): with ``plan_out`` (a dict) the driver
+    doubles as the measurement pass of ``plan_sharded_msf`` — it
+    records the one-off setup capacities, the level weight windows and
+    one ``RoundSpec`` per round with exactly the ladder-snapped
+    capacities it executed.  When a level ends because the host bound
+    hit zero candidates, the driver skips that trailing empty round but
+    records it as a **sentinel** spec at floor capacities: the unrolled
+    executor runs it, and its ``go`` flag re-proves in-program — on
+    every replay graph — what the zero bound proved on the host here.
     """
     p = 1
     for a in axes:
@@ -1571,10 +1596,13 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
         bu, bv = _ghost_fill_bounds(u_h, live_setup, vperm_h, skey, n,
                                     p, vps)
         bs = _subscribe_capacity_bound(np.asarray(lab), ghosts, p, vps)
+        qfu = quantize_capacity(bu, lk_full)
+        qfv = quantize_capacity(bv, lk_full)
+        qsub = quantize_capacity(bs, vps)
+        if plan_out is not None:
+            plan_out["ghost"] = GhostPlan(Gu, Gv, qfu, qfv, qsub)
         setup = _build_ghost_setup_fn(
-            n, vps, mesh, tuple(axes), Gu, Gv,
-            quantize_capacity(bu, lk_full), quantize_capacity(bv, lk_full),
-            quantize_capacity(bs, vps), schedule)
+            n, vps, mesh, tuple(axes), Gu, Gv, qfu, qfv, qsub, schedule)
         gu, gv, rsubs_dev, ovf, *st = setup(graph.u, graph.v, graph.w,
                                             dead, vperm, lab)
         overflow += int(ovf)
@@ -1593,6 +1621,10 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
         windows = list(zip(los, his))
     else:
         raise ValueError(algorithm)
+    if plan_out is not None:
+        plan_out["level_bounds"] = [(float(lo), float(hi))
+                                    for lo, hi in windows]
+        plan_out["rounds"] = []
 
     rounds = 0
     for lvl, (lo, hi) in enumerate(windows):
@@ -1616,8 +1648,6 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
             bound_e = _minedges_capacity_bound(ru_h, rv_h, alive_h,
                                                shard_of, heads, rid, p,
                                                vps, src_only)
-            if bound_e == 0:
-                break  # no candidate exists: go would come back False
             ce_r = quantize_capacity(bound_e, ce_full)
             choosing = np.zeros(p * vps, bool)
             choosing[np.unique(ru_h[alive_h])] = True
@@ -1658,6 +1688,13 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
                     _relabel_capacity_bound(lab_h, settled_h, p, vps), cl)
             else:
                 rl_r = cl
+            if plan_out is not None:
+                plan_out["rounds"].append(RoundSpec(
+                    level=lvl, cap_edge=ce_r, cap_lookup=lk_r,
+                    cap_contract=con_r, cap_relabel=rl_r, cap_push=cp_r,
+                    ghost=bool(ghost_round), sentinel=(bound_e == 0)))
+            if bound_e == 0:
+                break  # no candidate exists: go would come back False
             step = _build_sharded_round_fn(
                 n, vps, mesh, tuple(axes), ce_r, rl_r, lk_r, con_r,
                 cp_r, schedule, coalesce_eff, src_only, adaptive,
@@ -1706,6 +1743,244 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
                      np.float32(acc[6]))
     return (jnp.asarray(mask), weight, count, lab, np.int32(overflow),
             comm)
+
+
+# --------------------------------------------------------------------------
+# plan / execute split (ISSUE 5): the shrinking schedule as a value
+# --------------------------------------------------------------------------
+
+def _planned_shard_fn(u, v, w, eid, n: int, vps: int,
+                      axes: Tuple[str, ...], plan: RoundPlan):
+    """The plan executor: a Python-unrolled multi-round program.
+
+    One straight-line per-shard program for the whole solve — the same
+    setup phases and the same ``_round_body`` as the fused engine, but
+    with *per-round* static capacities read off the ``RoundPlan``
+    instead of one flat worst case, so the program jits and AOT-lowers
+    whole while its buffers follow the measured shrinking schedule.
+
+    Replay safety (never silent): besides the usual per-exchange
+    overflow accounting, two plan-specific hazards are surfaced —
+
+      * **ghost table capacity**: a replay graph with more distinct
+        endpoint runs than the planned tables would have fills
+        silently dropped (``mode="drop"``) and later read a *clipped*
+        table entry; the per-shard run counts are therefore compared
+        against the planned sizes and any excess is charged to
+        ``overflow``;
+      * **residual rounds**: each level's final planned round (a
+        sentinel at floor capacities when the measurement pass bounded
+        the level to zero remaining candidates) re-computes ``go``; a
+        level still choosing edges after its last planned round sets
+        the ``residual`` output, which the host wrapper turns into a
+        replan and the AOT path folds into ``overflow``.
+
+    Returns (mask, weight, count, lab, overflow, residual, comm) —
+    the fused engine's tuple plus the residual-level count.
+    """
+    names = tuple(axes)
+    valid = jnp.isfinite(w)
+    base = lax.axis_index(names) * vps
+    lab = base + jnp.arange(vps, dtype=jnp.int32)
+    mst = compat.vary(jnp.zeros(u.shape, bool), names)
+    overflow = jnp.int32(0)
+    stats = ExchangeStats.zeros()
+
+    if plan.local_preprocessing:
+        lab, pre_mst, dead, ovf, stats = _sharded_preprocess(
+            u, v, w, eid, valid, n, vps, plan.cap_prep, names,
+            plan.schedule, stats)
+        overflow += ovf
+    else:
+        pre_mst = compat.vary(jnp.zeros(u.shape, bool), names)
+        dead = u == v
+
+    runs_v = None
+    if plan.ghost is not None:
+        gp = plan.ghost
+        gstate, vidx, runs_u, ovf, stats = _ghost_setup(
+            u, v, valid, valid & ~dead, lab, None, n, vps, gp.table_u,
+            gp.table_v, gp.cap_fill_u, gp.cap_fill_v, gp.cap_subscribe,
+            names, plan.schedule, stats)
+        overflow += ovf
+        # ghost-table structural guard (see docstring): excess distinct
+        # runs over the planned table sizes are dropped fills — report
+        nu = lax.pmax(jnp.sum(runs_u[0].astype(jnp.int32)), names)
+        nv = lax.pmax(jnp.sum(vidx.runs[0].astype(jnp.int32)), names)
+        overflow += jnp.maximum(nu - gp.table_u, 0) \
+            + jnp.maximum(nv - gp.table_v, 0)
+    else:
+        gstate = None
+        runs_u = run_metadata(u) if (plan.coalesce or plan.src_only) \
+            else None
+        vidx = _build_v_index(v, valid, n, names) \
+            if (plan.coalesce and plan.vsorted_index) else None
+        runs_v = run_metadata(v) \
+            if (plan.coalesce and not plan.vsorted_index) else None
+
+    residual = jnp.int32(0)
+    for lvl, (lo, hi) in enumerate(plan.level_bounds):
+        live0 = valid
+        if len(plan.level_bounds) > 1:
+            live0 = valid & (w > jnp.float32(lo)) & (w <= jnp.float32(hi))
+        settled = compat.vary(jnp.zeros((vps,), bool), names)
+        go = None
+        for spec in plan.rounds:
+            if spec.level != lvl:
+                continue
+            # the driver's effective-lever rules, frozen per round: a
+            # non-ghost round of a ghost plan is the graceful fallback,
+            # which always runs coalesced through the v-sorted index
+            fallback = plan.ghost is not None and not spec.ghost
+            coalesce_eff = plan.coalesce or fallback
+            vidx_r = vidx if (spec.ghost
+                              or (coalesce_eff and vidx is not None)) \
+                else None
+            lab, mst, dead, gstate, settled, go, o, stats = _round_body(
+                u, v, w, eid, live0, lab, mst, dead, runs_u, runs_v,
+                vidx_r, gstate, settled, n, vps, names, spec.cap_edge,
+                spec.cap_relabel, spec.cap_lookup, spec.cap_contract,
+                spec.cap_push, plan.schedule, coalesce_eff,
+                plan.src_only, plan.adaptive_doubling, spec.ghost,
+                plan.relabel_skip, stats)
+            overflow += o
+        if go is not None:
+            # a level still choosing edges after its planned rounds has
+            # residual work the plan did not provision
+            residual += go.astype(jnp.int32)
+
+    full_mask = mst | pre_mst
+    weight = lax.psum(jnp.sum(jnp.where(full_mask, w, 0.0)), names)
+    count = lax.psum(jnp.sum(full_mask.astype(jnp.int32)), names)
+    comm = CommStats(stats.calls, stats.items, stats.bytes,
+                     jnp.int32(plan.num_rounds), stats.hits,
+                     stats.misses, stats.pushed)
+    return full_mask, weight, count, lab, overflow, residual, comm
+
+
+@functools.lru_cache(maxsize=32)
+def _build_planned_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
+                      axes: Tuple[str, ...], plan: RoundPlan):
+    fn = partial(_planned_shard_fn, n=n, vps=vps, axes=axes, plan=plan)
+    spec = P(axes)
+    return jax.jit(compat.shard_map(
+        fn, mesh=mesh, in_specs=(spec,) * 4,
+        out_specs=(spec, P(), P(), spec, P(), P(), P())))
+
+
+def _validate_plan_shape(plan: RoundPlan, n: int, p: int,
+                         cap: int) -> None:
+    plan.validate()
+    if (plan.n, plan.num_shards, plan.cap_per_shard) != (n, p, cap):
+        raise ValueError(
+            f"plan was measured for n={plan.n}, p={plan.num_shards}, "
+            f"cap/shard={plan.cap_per_shard} but this solve has n={n}, "
+            f"p={p}, cap/shard={cap}; plans only transfer across "
+            "graphs built at the same shape")
+
+
+def plan_sharded_msf(graph: DistGraph, n: int, mesh: jax.sharding.Mesh,
+                     *, algorithm: str = "boruvka",
+                     axis_names: Optional[Sequence[str]] = None,
+                     num_levels: int = 4,
+                     max_rounds: Optional[int] = None,
+                     edge_capacity: Optional[int] = None,
+                     label_capacity: Optional[int] = None,
+                     lookup_capacity: Optional[int] = None,
+                     schedule: str = "grid",
+                     local_preprocessing: bool = True,
+                     coalesce: bool = True, src_only: bool = True,
+                     adaptive_doubling: bool = True,
+                     ghost_cache: bool = True, relabel_skip: bool = True,
+                     vsorted_index: bool = True,
+                     push_capacity: Optional[int] = None,
+                     round_trace: Optional[List[dict]] = None
+                     ) -> RoundPlan:
+    """Measure a ``RoundPlan`` for ``graph`` (one host-interleaved pass).
+
+    Runs the shrinking-capacity driver as the measurement backend and
+    freezes the schedule it chose — per-round exchange capacities
+    (already snapped to the ``shrink_schedule`` ladder, so plans
+    transfer across structurally similar graphs), the one-off
+    preprocessing / ghost-setup capacities, the filter-level weight
+    windows and one trailing sentinel round per level that ended on a
+    zero host bound.  The returned plan drives the Python-unrolled
+    executor: ``distributed_sharded_msf(..., plan=plan)`` (works under
+    AOT tracing — ``make_sharded_mst_step(plan=...)``), ``plan.pad``
+    for serving headroom, ``plan.to_json`` for persistence.
+
+    Raises on nonzero measurement overflow (user-undersized explicit
+    capacities): a plan recorded off a lossy pass would be garbage.
+
+    ``round_trace`` passes through to the driver, so one call yields
+    both the plan and the measured per-round comm table.
+    """
+    axes = tuple(axis_names or mesh.axis_names)
+    p = 1
+    for a in axes:
+        p *= mesh.shape[a]
+    vps = vertices_per_shard(n, p)
+    cap = graph.cap_total // p
+    if isinstance(graph.u, jax.core.Tracer):
+        raise ValueError("plan_sharded_msf measures exact host bounds "
+                         "and needs a concrete graph, not tracers")
+    if p > MAX_GHOST_SHARDS:
+        ghost_cache = False  # int32 subscriber bitmask limit
+    ce = int(cap if edge_capacity is None else edge_capacity)
+    cl = int(vps if label_capacity is None else label_capacity)
+    if lookup_capacity is None:
+        lk = default_lookup_capacity(
+            graph, p, n, vsorted=vsorted_index or ghost_cache) \
+            if (coalesce or ghost_cache) else ce
+    else:
+        lk = int(lookup_capacity)
+    rec: dict = {}
+    res = _shrinking_capacity_msf(
+        graph, n, mesh, axes, algorithm, num_levels, max_rounds, ce, cl,
+        lk, schedule, local_preprocessing, coalesce, src_only,
+        adaptive_doubling, ghost_cache, relabel_skip, vsorted_index,
+        push_capacity, round_trace, plan_out=rec)
+    if int(res[4]):
+        raise RuntimeError(
+            f"measurement pass overflowed ({int(res[4])} items): a plan "
+            "recorded off a lossy pass would be unreliable — retry with "
+            "larger explicit capacities (or the exact defaults)")
+    return RoundPlan(
+        n=n, num_shards=p, cap_per_shard=cap, algorithm=algorithm,
+        schedule=schedule, local_preprocessing=local_preprocessing,
+        coalesce=coalesce, src_only=src_only,
+        adaptive_doubling=adaptive_doubling, relabel_skip=relabel_skip,
+        vsorted_index=vsorted_index, cap_prep=cl, edge_capacity_full=ce,
+        label_capacity_full=cl, lookup_capacity_full=lk,
+        ghost=rec.get("ghost"),
+        level_bounds=tuple(rec["level_bounds"]),
+        rounds=tuple(rec["rounds"])).validate()
+
+
+def execute_plan(graph: DistGraph, n: int, mesh: jax.sharding.Mesh,
+                 plan: RoundPlan, *,
+                 axis_names: Optional[Sequence[str]] = None,
+                 replan: bool = True,
+                 round_trace: Optional[List[dict]] = None):
+    """Replay a measured ``RoundPlan`` on a same-shape graph.
+
+    Alias for ``distributed_sharded_msf(graph, n, mesh, plan=plan)``:
+    runs the compiled Python-unrolled program and — if the plan does
+    not fit this graph (overflow, or residual rounds after a level's
+    last planned round) — falls back to one fresh measured pass with
+    the plan's levers (``replan=True``, the serving default) or raises
+    (``replan=False``, the strict mode tests pin replay exactness
+    with).  Never returns an unreliable result silently.
+
+    ``round_trace`` is **replan-only** here: the unrolled program has
+    no host between rounds to tabulate, so a fitting replay leaves the
+    list empty — per-round numbers for a plan come from the plan
+    itself (``launch/roofline.py: plan_summary``) or from the
+    measurement pass (``plan_sharded_msf(round_trace=...)``).
+    """
+    return distributed_sharded_msf(graph, n, mesh, plan=plan,
+                                   axis_names=axis_names, replan=replan,
+                                   round_trace=round_trace)
 
 
 def vertices_per_shard(n: int, num_shards: int) -> int:
@@ -1802,7 +2077,10 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
                             relabel_skip: bool = True,
                             vsorted_index: bool = True,
                             push_capacity: Optional[int] = None,
-                            round_trace: Optional[List[dict]] = None):
+                            round_trace: Optional[List[dict]] = None,
+                            plan: Optional[RoundPlan] = None,
+                            replan: bool = True,
+                            ghost_shard_limit: Optional[int] = None):
     """Run the sharded-label distributed MSF on a mesh.
 
     Returns (mask, weight, count, labels, overflow, stats):
@@ -1848,6 +2126,21 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
     comparator in benchmarks/sharded_scaling.py; no effect with the
     ghost cache on, which always builds the sorted index).
 
+    ``plan`` (ISSUE 5) replays a measured ``RoundPlan`` instead: the
+    schedule's per-round capacities become static arguments of one
+    Python-unrolled program that jits — and, uniquely among the
+    shrinking paths, **AOT-lowers** (tracer inputs are fine).  The
+    plan's frozen levers override this call's lever flags.  A plan that
+    does not fit the graph is never silent: with concrete inputs the
+    call replans (one fresh measured pass; ``replan=False`` raises
+    instead), under tracing the residual-round count is folded into the
+    returned ``overflow``.  See ``plan_sharded_msf`` / ``execute_plan``
+    / ``core/plan.py``.
+
+    ``ghost_shard_limit`` (tests/diagnostics) overrides the
+    ``MAX_GHOST_SHARDS`` threshold of the subscriber-bitmask fallback,
+    so the p > 31 auto-disable path is exercisable on small meshes.
+
     The flags default to the optimized engine; passing
     ``local_preprocessing=False, coalesce=False, src_only=False,
     adaptive_doubling=False, shrink_capacities=False, ghost_cache=False,
@@ -1861,7 +2154,38 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
         p *= mesh.shape[a]
     vps = vertices_per_shard(n, p)
     cap = graph.cap_total // p
-    if p > MAX_GHOST_SHARDS:
+    if plan is not None:
+        _validate_plan_shape(plan, n, p, cap)
+        fn = _build_planned_fn(n, vps, mesh, axes, plan)
+        out = fn(graph.u, graph.v, graph.w, graph.eid)
+        mask, weight, count, lab, ovf, residual, comm = out
+        if isinstance(graph.u, jax.core.Tracer):
+            # AOT lowering: no host to replan on — fold the residual
+            # signal into overflow (results exact iff 0, the standard
+            # contract) and keep the engine's 6-tuple arity
+            return mask, weight, count, lab, ovf + residual, comm
+        if int(ovf) == 0 and int(residual) == 0:
+            return mask, weight, count, lab, ovf, comm
+        if not replan:
+            raise RuntimeError(
+                f"plan replay does not fit this graph (overflow="
+                f"{int(ovf)}, residual levels={int(residual)}); pad the "
+                "plan, re-measure with plan_sharded_msf, or allow "
+                "replan=True")
+        # overflow -> replan fallback: one fresh measured pass with the
+        # plan's frozen levers — never a silently unreliable result
+        return distributed_sharded_msf(
+            graph, n, mesh, algorithm=plan.algorithm, axis_names=axes,
+            num_levels=len(plan.level_bounds), schedule=plan.schedule,
+            local_preprocessing=plan.local_preprocessing,
+            coalesce=plan.coalesce, src_only=plan.src_only,
+            adaptive_doubling=plan.adaptive_doubling,
+            shrink_capacities=True, ghost_cache=plan.ghost is not None,
+            relabel_skip=plan.relabel_skip,
+            vsorted_index=plan.vsorted_index, round_trace=round_trace)
+    limit = MAX_GHOST_SHARDS if ghost_shard_limit is None \
+        else int(ghost_shard_limit)
+    if p > limit:
         ghost_cache = False  # int32 subscriber bitmask limit
     # is-None (not falsy) checks: an explicit 0 must be honored — it
     # yields all-overflow results, which the overflow count reports
@@ -1870,6 +2194,15 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
     # the exact host-side bounds need concrete edge arrays; under AOT
     # lowering (make_sharded_mst_step) fall back to the safe flat bound
     concrete = not isinstance(graph.u, jax.core.Tracer)
+    if shrink_capacities and not concrete:
+        # no longer a docstring-only caveat (ISSUE 5): the host loop
+        # cannot run on tracers, so say so — a RoundPlan is the way to
+        # keep the schedule under AOT
+        warnings.warn(
+            "shrink_capacities is ignored under tracing (host bounds "
+            "need concrete inputs): lowering the fused flat-capacity "
+            "engine; pass plan=plan_sharded_msf(...) to AOT-lower the "
+            "shrinking schedule", stacklevel=2)
     if lookup_capacity is None:
         lk = default_lookup_capacity(
             graph, p, n, vsorted=vsorted_index or ghost_cache) \
@@ -1892,15 +2225,64 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
 
 
 def make_sharded_mst_step(n: int, cap_total: int, mesh: jax.sharding.Mesh,
-                          algorithm: str = "boruvka", **kw):
+                          algorithm: str = "boruvka",
+                          plan: Optional[RoundPlan] = None, **kw):
     """AOT-lowerable sharded MSF step (dry-run/roofline harness parity).
 
-    Traced inputs cannot drive the host-orchestrated shrinking schedule,
-    so the step lowers the fused flat-capacity engine (the
-    ``shrink_capacities`` knob is ignored under tracing)."""
-    def step(u, v, w, eid):
-        g = DistGraph(u, v, w, eid)
-        return distributed_sharded_msf(g, n, mesh, algorithm=algorithm, **kw)
+    With ``plan`` (a ``RoundPlan`` from ``plan_sharded_msf`` or
+    ``core/plan.py: synthetic_plan``) the step lowers the
+    **Python-unrolled shrinking-schedule program**: per-round measured
+    capacities as static arguments, one compiled artifact for the whole
+    solve — the serving-replay path, costable by dry-run/roofline
+    without running.  The plan's frozen levers override ``algorithm``
+    and the lever kwargs; residual-round signals fold into the returned
+    ``overflow`` (exact iff 0, the standard contract).
+
+    Without a plan, traced inputs cannot drive the host-orchestrated
+    shrinking schedule, so the step lowers the fused flat-capacity
+    engine.  Passing ``shrink_capacities=True`` explicitly here is
+    therefore an error (it used to be silently ignored); omitting it
+    warns once and lowers flat — pass ``shrink_capacities=False`` to
+    opt into the flat engine silently.
+    """
+    if plan is not None:
+        p = 1
+        for a in tuple(kw.get("axis_names") or mesh.axis_names):
+            p *= mesh.shape[a]
+        if (cap_total != plan.cap_per_shard * p or n != plan.n
+                or p != plan.num_shards):
+            raise ValueError(
+                f"plan shape (n={plan.n}, p={plan.num_shards}, "
+                f"cap/shard={plan.cap_per_shard}) does not match the "
+                f"step shape (n={n}, p={p}, "
+                f"cap/shard={cap_total // max(p, 1)})")
+
+        def step(u, v, w, eid):
+            g = DistGraph(u, v, w, eid)
+            return distributed_sharded_msf(
+                g, n, mesh, plan=plan,
+                axis_names=kw.get("axis_names"))
+    else:
+        if kw.get("shrink_capacities"):
+            raise ValueError(
+                "shrink_capacities=True cannot drive the host-"
+                "orchestrated schedule under AOT tracing; measure a "
+                "RoundPlan once (plan_sharded_msf) and pass plan=..., "
+                "or request the flat-capacity engine explicitly with "
+                "shrink_capacities=False")
+        if "shrink_capacities" not in kw:
+            warnings.warn(
+                "make_sharded_mst_step without a plan lowers the fused "
+                "flat-capacity engine (worst-case buffers every round); "
+                "pass plan=plan_sharded_msf(...) to AOT-lower the "
+                "shrinking schedule, or shrink_capacities=False to "
+                "silence this", stacklevel=2)
+            kw = dict(kw, shrink_capacities=False)
+
+        def step(u, v, w, eid):
+            g = DistGraph(u, v, w, eid)
+            return distributed_sharded_msf(g, n, mesh,
+                                           algorithm=algorithm, **kw)
 
     specs = (
         jax.ShapeDtypeStruct((cap_total,), jnp.int32),

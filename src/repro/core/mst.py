@@ -20,9 +20,13 @@ capacities from host bounds on the dead-edge mask; pass False for the
 fused flat-capacity program, e.g. to compare counters).  ``ghost_cache``
 (default on) replaces the per-round endpoint lookups with per-shard
 ghost-label tables maintained by a dirty-label push from the owners —
-see core/distributed_sharded.py.  The engine matrix with when-to-use
-guidance is in README.md; docs/ARCHITECTURE.md maps the knobs to the
-paper's phases.
+see core/distributed_sharded.py.  ``plan`` (ISSUE 5) replays a measured
+``core/plan.py: RoundPlan`` as one Python-unrolled program — the
+shrinking schedule without the host in the loop, AOT-lowerable; an
+ill-fitting plan replans, never silently degrades (see
+docs/ARCHITECTURE.md §Round plans).  The engine matrix with
+when-to-use guidance is in README.md; docs/ARCHITECTURE.md maps the
+knobs to the paper's phases.
 """
 from __future__ import annotations
 

@@ -1,0 +1,275 @@
+"""First-class round plans for the sharded MSF engine (ISSUE 5).
+
+The shrinking capacity schedule (``distributed_sharded.py:
+_shrinking_capacity_msf``) sizes every round's exchanges from exact
+host bounds on the measured dead-edge mask — but only host-interleaved:
+a traced input cannot drive the host loop, so the AOT / dry-run /
+serving path used to pay flat worst-case capacities.  A ``RoundPlan``
+closes that gap by making the schedule a *value*:
+
+  * ``plan_sharded_msf`` (the planner, in ``distributed_sharded.py``)
+    runs the host-interleaved driver once as its **measurement
+    backend** and records, per round, the ladder-snapped capacities the
+    driver chose — plus the one-off preprocessing / ghost-setup
+    capacities and the filter-level weight windows.
+  * The **executor** (``distributed_sharded.py: _build_planned_fn``)
+    consumes the plan as static arguments and emits a Python-unrolled
+    multi-round program that jits and AOT-lowers whole — the shrinking
+    schedule without a host in the loop.
+  * ``pad(margin)`` returns a serving copy with capacity headroom
+    (still snapped to the shared ``shrink_schedule`` ladder, so padded
+    plans reuse compiled programs), and ``to_json``/``from_json`` make
+    plans durable: measure once, replay across processes.
+
+Replay contract (the capacity/overflow contract of
+``docs/ARCHITECTURE.md`` extended to plans): executing a plan on a
+graph it does not fit is **never silent** — undersized capacities
+surface through the usual overflow count, a plan with too few rounds
+surfaces through the executor's residual-work flag, and the public
+entry points either *replan* (one fresh measured pass) or raise.
+
+Everything in this module is host-side plain data: no jax imports, so
+the launch layer (dry-run / roofline) can cost plans without touching
+an accelerator.
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import NamedTuple, Optional, Tuple
+
+
+class RoundSpec(NamedTuple):
+    """Static capacities for one Borůvka round of the planned program.
+
+    ``cap_edge`` bounds the MINEDGES candidate exchange, ``cap_lookup``
+    the endpoint-label lookups, ``cap_contract`` the pointer-doubling
+    hops, ``cap_relabel`` the RELABEL requests and ``cap_push`` the
+    ghost root-delta push — the same five knobs the host-interleaved
+    driver re-derives every round, frozen.  ``ghost`` records whether
+    the round ran on the ghost-label cache (the driver's graceful
+    fallback can switch it off mid-solve).  ``sentinel`` marks a round
+    the measurement pass *bounded to zero candidates* and therefore
+    skipped: the executor still runs it (at floor capacities, a no-op
+    on the measured graph) so its ``go`` flag re-proves on every replay
+    graph that the level really is finished — the in-program equivalent
+    of the driver's host-side zero-bound check.
+    """
+    level: int
+    cap_edge: int
+    cap_lookup: int
+    cap_contract: int
+    cap_relabel: int
+    cap_push: int
+    ghost: bool
+    sentinel: bool = False
+
+
+class GhostPlan(NamedTuple):
+    """One-off ghost-cache setup sizes: the two per-shard table sizes
+    (distinct-endpoint run counts, host-measured) and the fill /
+    root-subscribe exchange capacities."""
+    table_u: int
+    table_v: int
+    cap_fill_u: int
+    cap_fill_v: int
+    cap_subscribe: int
+
+
+_CAP_FIELDS = ("cap_edge", "cap_lookup", "cap_contract", "cap_relabel",
+               "cap_push")
+
+
+class RoundPlan(NamedTuple):
+    """A serializable, mesh-shape-bound schedule for one sharded solve.
+
+    Shape binding: a plan is valid for any graph built with the same
+    ``n``, shard count and per-shard edge capacity (``build_dist_graph``
+    with the same inputs' sizes) — the capacities inside were measured
+    on one such graph and *transfer* to structurally similar ones
+    because they are snapped up to the geometric
+    ``core/distributed.py: shrink_schedule`` ladder.  Whether a
+    transfer actually fits is re-proved on every execution by the
+    overflow / residual accounting; ``pad`` buys headroom first.
+
+    The engine levers (``coalesce`` … ``vsorted_index``) are frozen
+    into the plan because the capacities are only meaningful for the
+    exchange pattern they were measured on; the executor follows the
+    plan, not the caller's flags.  ``ghost is None`` means the cache
+    was off (or auto-disabled) at plan time.
+    """
+    n: int
+    num_shards: int
+    cap_per_shard: int
+    algorithm: str
+    schedule: str
+    local_preprocessing: bool
+    coalesce: bool
+    src_only: bool
+    adaptive_doubling: bool
+    relabel_skip: bool
+    vsorted_index: bool
+    cap_prep: int
+    edge_capacity_full: int
+    label_capacity_full: int
+    lookup_capacity_full: int
+    ghost: Optional[GhostPlan]
+    level_bounds: Tuple[Tuple[float, float], ...]
+    rounds: Tuple[RoundSpec, ...]
+
+    # -- structure ---------------------------------------------------------
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.rounds)
+
+    def validate(self) -> "RoundPlan":
+        """Raise ValueError on structurally broken plans (hand-edited
+        JSON, truncation bugs) before they reach the executor."""
+        if self.n < 1 or self.num_shards < 1 or self.cap_per_shard < 1:
+            raise ValueError(f"bad plan dims: n={self.n} "
+                             f"p={self.num_shards} cap={self.cap_per_shard}")
+        if not self.level_bounds or not self.rounds:
+            raise ValueError("plan has no levels or no rounds")
+        levels = [r.level for r in self.rounds]
+        if levels != sorted(levels):
+            raise ValueError("plan rounds are not grouped by level")
+        if set(levels) != set(range(len(self.level_bounds))):
+            raise ValueError(
+                f"plan levels {sorted(set(levels))} do not cover the "
+                f"{len(self.level_bounds)} level windows (every level "
+                "needs >= 1 round, sentinel included)")
+        for r in self.rounds:
+            for f in _CAP_FIELDS:
+                if getattr(r, f) < 1:
+                    raise ValueError(f"round {r} has {f} < 1")
+        if self.ghost is not None and min(self.ghost) < 1:
+            raise ValueError(f"bad ghost sizes: {self.ghost}")
+        return self
+
+    # -- serving headroom --------------------------------------------------
+
+    def pad(self, margin: float = 0.25) -> "RoundPlan":
+        """Return a copy with every exchange capacity scaled by
+        ``1 + margin`` and re-snapped **up** to the shared capacity
+        ladder (never past the flat full), for replaying one measured
+        plan across structurally similar serving graphs.  Ghost table
+        sizes are padded too (bounded by the per-shard slot count, the
+        fused engine's safe size).  Round count and weight windows are
+        unchanged — a graph needing more rounds is caught by the
+        executor's residual flag, not papered over.
+        """
+        from repro.core.distributed import quantize_capacity
+        if margin < 0:
+            raise ValueError(f"margin must be >= 0, got {margin}")
+
+        def up(c: int, full: int) -> int:
+            return quantize_capacity(
+                min(int(math.ceil(c * (1.0 + margin))), full), full)
+
+        fulls = {"cap_edge": self.edge_capacity_full,
+                 "cap_lookup": self.lookup_capacity_full,
+                 "cap_contract": self.label_capacity_full,
+                 "cap_relabel": self.label_capacity_full,
+                 "cap_push": self.label_capacity_full}
+        rounds = tuple(
+            r._replace(**{f: up(getattr(r, f), fulls[f])
+                          for f in _CAP_FIELDS})
+            for r in self.rounds)
+        ghost = self.ghost
+        if ghost is not None:
+            # table sizes are exact measured counts, not ladder rungs:
+            # scale and clamp to the per-shard slot count (the fused
+            # engine's always-safe size) without snapping
+            def up_table(c: int) -> int:
+                return min(int(math.ceil(c * (1.0 + margin))),
+                           self.cap_per_shard)
+
+            ghost = GhostPlan(
+                table_u=up_table(ghost.table_u),
+                table_v=up_table(ghost.table_v),
+                cap_fill_u=up(ghost.cap_fill_u, self.lookup_capacity_full),
+                cap_fill_v=up(ghost.cap_fill_v, self.lookup_capacity_full),
+                cap_subscribe=up(ghost.cap_subscribe,
+                                 self.label_capacity_full))
+        return self._replace(rounds=rounds, ghost=ghost)
+
+    # -- serialization -----------------------------------------------------
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        d = self._asdict()
+        d["ghost"] = None if self.ghost is None else self.ghost._asdict()
+        d["level_bounds"] = [[_enc(lo), _enc(hi)]
+                             for lo, hi in self.level_bounds]
+        d["rounds"] = [r._asdict() for r in self.rounds]
+        return json.dumps({"version": 1, **d}, indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "RoundPlan":
+        d = json.loads(text)
+        ver = d.pop("version", None)
+        if ver != 1:
+            raise ValueError(f"unsupported RoundPlan version: {ver!r}")
+        d["ghost"] = None if d["ghost"] is None else GhostPlan(**d["ghost"])
+        d["level_bounds"] = tuple((_dec(lo), _dec(hi))
+                                  for lo, hi in d["level_bounds"])
+        d["rounds"] = tuple(RoundSpec(**r) for r in d["rounds"])
+        return cls(**d).validate()
+
+
+def _enc(x: float):
+    """±inf-safe JSON encoding for the level weight windows."""
+    if math.isinf(x):
+        return "inf" if x > 0 else "-inf"
+    return float(x)
+
+
+def _dec(x) -> float:
+    return float(x)
+
+
+def synthetic_plan(n: int, cap_total: int, num_shards: int, *,
+                   algorithm: str = "boruvka", schedule: str = "grid",
+                   local_preprocessing: bool = True) -> RoundPlan:
+    """An unmeasured geometric-ladder plan for AOT costing (dry-run).
+
+    Encodes the paper's contraction assumption directly — Borůvka at
+    least halves the active components per round, so round ``r`` gets
+    rung ``r`` of the shared halving ladder for every exchange — with
+    ``log2(n) + 1`` rounds (the engines' round bound).  Meant for
+    *costing* a planned program's compiled memory/collectives on meshes
+    where no measurement graph exists (``launch/dryrun.py``); replaying
+    it on a real graph is legal but may report overflow / residual
+    rounds and replan, exactly like any other ill-fitting plan.
+
+    Conservative lever choices (no ghost cache, no settled skip): the
+    synthesized capacities have no host mirror to make them exact, so
+    the plan sticks to the paths whose floors degrade to reported
+    overflow rather than extra structure.
+    """
+    from repro.core.distributed import shrink_schedule
+    cap = max(1, cap_total // num_shards)
+    vps = max(1, -(-n // num_shards))
+    rounds_n = max(1, math.ceil(math.log2(max(n, 2))) + 1)
+    edge_l = shrink_schedule(cap)
+    lab_l = shrink_schedule(vps)
+
+    def rung(ladder, r):
+        return ladder[min(r, len(ladder) - 1)]
+
+    rounds = tuple(
+        RoundSpec(level=0, cap_edge=rung(edge_l, r),
+                  cap_lookup=rung(edge_l, r),
+                  cap_contract=rung(lab_l, r), cap_relabel=vps,
+                  cap_push=1, ghost=False,
+                  sentinel=(r == rounds_n - 1))
+        for r in range(rounds_n))
+    return RoundPlan(
+        n=n, num_shards=num_shards, cap_per_shard=cap,
+        algorithm=algorithm, schedule=schedule,
+        local_preprocessing=local_preprocessing,
+        coalesce=True, src_only=True, adaptive_doubling=True,
+        relabel_skip=False, vsorted_index=True, cap_prep=vps,
+        edge_capacity_full=cap, label_capacity_full=vps,
+        lookup_capacity_full=cap, ghost=None,
+        level_bounds=((-math.inf, math.inf),), rounds=rounds).validate()

@@ -161,30 +161,85 @@ def run_cell(arch: str, shape_id: str, mesh, mesh_label: str,
 
 def run_mst_cell(mesh, mesh_label: str, n_exp: int = 22,
                  edges_per_shard_exp: int = 18,
-                 algorithm: str = "boruvka", local_preprocessing=True):
+                 algorithm: str = "boruvka", local_preprocessing=True,
+                 engine: str = "replicated", plan_path=None):
     """The paper's own workload on the production mesh: distributed
     Borůvka step over a 1D-partitioned edge list (weak-scaling shape:
-    2^n_exp vertices, 2^edges_per_shard_exp directed slots per device)."""
-    from repro.core.distributed import make_mst_step
+    2^n_exp vertices, 2^edges_per_shard_exp directed slots per device).
+
+    ``engine="sharded"`` costs the sharded-label engine's **planned**
+    program instead (ISSUE 5): a ``RoundPlan`` — loaded from
+    ``plan_path`` (``plan.to_json`` output, e.g. measured at benchmark
+    scale) or synthesized on the geometric ladder
+    (``core/plan.py: synthetic_plan``) — is AOT-lowered as one unrolled
+    multi-round program and its compiled memory/collectives are
+    recorded next to the flat-capacity lowering of the same shape, all
+    without running anything.
+    """
     from jax.sharding import NamedSharding, PartitionSpec as P
     chips = mesh.devices.size
     n = 2 ** n_exp
     cap_total = chips * (2 ** edges_per_shard_exp)
     axes = tuple(mesh.axis_names)
-    step, specs = make_mst_step(n, cap_total, mesh, algorithm=algorithm,
-                                axis_names=axes,
-                                local_preprocessing=local_preprocessing)
     sh = NamedSharding(mesh, P(axes))
-    rec = {"arch": f"mst-{algorithm}", "shape": f"n=2^{n_exp}",
+
+    def compile_step(step, specs, rec, prefix=""):
+        t0 = time.time()
+        compiled = jax.jit(step, in_shardings=(sh,) * 4).lower(
+            *specs).compile()
+        rec[prefix + "compile_s"] = round(time.time() - t0, 2)
+        rec[prefix + "cost"] = rl.cost_summary(compiled)
+        rec[prefix + "collectives"] = rl.collective_bytes_from_hlo(
+            compiled.as_text())
+        rec[prefix + "memory"] = _mem_dict(compiled)
+        return compiled
+
+    rec = {"arch": f"mst-{engine}-{algorithm}", "shape": f"n=2^{n_exp}",
            "mesh": mesh_label}
     try:
-        t0 = time.time()
-        lowered = jax.jit(step, in_shardings=(sh, sh, sh, sh)).lower(*specs)
-        compiled = lowered.compile()
-        rec["compile_s"] = round(time.time() - t0, 2)
-        rec["cost"] = rl.cost_summary(compiled)
-        rec["collectives"] = rl.collective_bytes_from_hlo(compiled.as_text())
-        rec["memory"] = _mem_dict(compiled)
+        if engine == "sharded":
+            import warnings
+            from repro.core.distributed_sharded import make_sharded_mst_step
+            from repro.core.plan import RoundPlan, synthetic_plan
+            if plan_path:
+                # a measured plan's levers are frozen — the cell costs
+                # what the plan encodes, recorded below
+                with open(plan_path) as f:
+                    plan = RoundPlan.from_json(f.read())
+            else:
+                plan = synthetic_plan(
+                    n, cap_total, chips, algorithm=algorithm,
+                    local_preprocessing=local_preprocessing)
+            rec["plan"] = rl.plan_summary(plan)
+            rec["plan_source"] = plan_path or "synthetic"
+            rec["plan_local_preprocessing"] = plan.local_preprocessing
+            step, specs = make_sharded_mst_step(n, cap_total, mesh,
+                                                plan=plan)
+            compile_step(step, specs, rec)
+            # the flat-capacity comparator: same shape, fused engine
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                fstep, fspecs = make_sharded_mst_step(
+                    n, cap_total, mesh, algorithm=plan.algorithm,
+                    shrink_capacities=False)
+            compile_step(fstep, fspecs, rec, prefix="flat_")
+            ft = rec["flat_memory"].get("temp_bytes")
+            pt = rec["memory"].get("temp_bytes")
+            if ft and pt:
+                rec["temp_bytes_shrink_vs_flat"] = ft / max(pt, 1)
+            rec["note"] = ("planned program is fully unrolled: HLO "
+                           "collective weights are exact per round; "
+                           "flat comparator uses the static "
+                           "log2(n)+1 while bound")
+        else:
+            from repro.core.distributed import make_mst_step
+            step, specs = make_mst_step(
+                n, cap_total, mesh, algorithm=algorithm, axis_names=axes,
+                local_preprocessing=local_preprocessing)
+            compile_step(step, specs, rec)
+            rec["note"] = ("while-loop costs use the static iteration "
+                           f"bound (log2(n)+1 = {int(math.log2(n)) + 1} "
+                           "rounds)")
         terms = rl.RooflineTerms(
             flops=rec["cost"]["flops"], bytes_accessed=rec["cost"]["bytes"],
             collective_bytes=rec["collectives"].get(
@@ -192,8 +247,6 @@ def run_mst_cell(mesh, mesh_label: str, n_exp: int = 22,
             chips=chips)
         rec["roofline"] = terms.as_dict()
         rec["status"] = "ok"
-        rec["note"] = ("while-loop costs use the static iteration bound "
-                       f"(log2(n)+1 = {int(math.log2(n)) + 1} rounds)")
     except Exception as e:
         rec["status"] = "failed"
         rec["error"] = f"{type(e).__name__}: {e}"
@@ -210,6 +263,13 @@ def main():
     ap.add_argument("--mst", action="store_true", help="MST cell only")
     ap.add_argument("--mst-algorithm", default="boruvka")
     ap.add_argument("--mst-no-preprocessing", action="store_true")
+    ap.add_argument("--mst-engine", default="replicated",
+                    choices=["replicated", "sharded"],
+                    help="sharded = AOT-cost the planned (RoundPlan) "
+                         "unrolled program vs its flat lowering")
+    ap.add_argument("--mst-plan", default=None, metavar="PLAN_JSON",
+                    help="RoundPlan JSON (plan.to_json) to cost; "
+                         "default synthesizes a geometric-ladder plan")
     ap.add_argument("--override", action="append", default=[],
                     help="config overrides, e.g. attn_impl=blockwise")
     ap.add_argument("--no-probes", action="store_true")
@@ -231,7 +291,8 @@ def main():
         if args.mst:
             rec = run_mst_cell(
                 mesh, label, algorithm=args.mst_algorithm,
-                local_preprocessing=not args.mst_no_preprocessing)
+                local_preprocessing=not args.mst_no_preprocessing,
+                engine=args.mst_engine, plan_path=args.mst_plan)
             print(json.dumps({k: rec[k] for k in rec
                               if k not in ("trace",)}, default=str)[:2000])
             records.append(rec)

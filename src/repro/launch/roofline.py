@@ -43,8 +43,12 @@ _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
 _SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+# tuple results (XLA decomposes lax.all_to_all into a tuple-form
+# all-to-all of per-peer slices) may contain /*index=k*/ comments, so
+# the tuple alternative must admit '=' inside the parentheses — it only
+# needs to exclude nested parens, which HLO shape tuples never have
 _OP_RE = re.compile(
-    r"=\s+(?P<res>\([^=]*?\)|\S+)\s+"
+    r"=\s+(?P<res>\([^()]*\)|\S+)\s+"
     r"(?P<kind>(?:all-gather|all-reduce|reduce-scatter|all-to-all|"
     r"collective-permute)(?:-start)?)\(")
 _GROUPS_COMPACT_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
@@ -280,6 +284,39 @@ class RooflineTerms:
             "dominant": self.dominant,
             "roofline_fraction": self.compute_fraction,
         }
+
+
+def plan_summary(plan) -> Dict[str, float]:
+    """Host-side static costing view of a ``core/plan.py: RoundPlan``.
+
+    A plan *is* the compiled program's buffer story — every exchange of
+    round ``r`` allocates ``[p, cap]`` buffers at the plan's static
+    capacities — so the capacity trajectory can be costed without
+    compiling, and compared against the compiled artifact's
+    ``memory_analysis`` / HLO collective bytes (the two views are
+    cross-checked in ``tests/test_roofline_crosscheck.py``).  Sums and
+    maxima only, so dry-run records stay small.
+    """
+    caps = ("cap_edge", "cap_lookup", "cap_contract", "cap_relabel",
+            "cap_push")
+    out: Dict[str, float] = {
+        "rounds": float(plan.num_rounds),
+        "sentinel_rounds": float(sum(r.sentinel for r in plan.rounds)),
+        "levels": float(len(plan.level_bounds)),
+        "ghost": float(plan.ghost is not None),
+        "edge_capacity_full": float(plan.edge_capacity_full),
+    }
+    for f in caps:
+        vals = [getattr(r, f) for r in plan.rounds]
+        out[f"{f}_sum"] = float(sum(vals))
+        out[f"{f}_max"] = float(max(vals))
+    # flat comparator: the fused engine ships the full edge capacity
+    # for every round the plan runs
+    out["cap_edge_flat_sum"] = float(plan.edge_capacity_full
+                                     * plan.num_rounds)
+    out["cap_edge_shrink"] = out["cap_edge_flat_sum"] / max(
+        out["cap_edge_sum"], 1.0)
+    return out
 
 
 def cost_summary(compiled) -> Dict[str, float]:

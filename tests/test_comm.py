@@ -250,3 +250,36 @@ print("OK")
 def test_comm(name, script):
     out = run_multidevice(script, ndev=8)
     assert "OK" in out
+
+
+def test_scatter_mask_width_to_31_shards():
+    """ISSUE 5 satellite: unit-level harness for the subscriber-bitmask
+    width contract of ``scatter_updates``.  The copy-matrix expansion is
+    pure bit arithmetic (no mesh needed), so the full 31-destination
+    width — including bit 30, the last usable one before the int32 sign
+    bit — is checked directly against a numpy reference; the >31-shard
+    engine fallback that this limit forces is exercised end-to-end in
+    tests/test_distributed_sharded.py (ghost_limit_fallback).
+    """
+    import numpy as np
+
+    from repro.comm.exchange import _mask_to_copies
+
+    rng = np.random.default_rng(5)
+    L, p = 96, 31
+    # dense random masks plus the corner rows: empty, all-31-bits
+    # (0x7fffffff, a positive int32), and the single high bit 30
+    masks = rng.integers(0, 1 << 31, L, dtype=np.int64)
+    masks[0], masks[1], masks[2] = 0, (1 << 31) - 1, 1 << 30
+    masks = masks.astype(np.int32)
+    valid = rng.random(L) < 0.8
+    valid[1] = valid[2] = True
+    got = np.asarray(_mask_to_copies(masks, valid, p))
+    assert got.shape == (L, p)
+    expect = valid[:, None] & (
+        ((masks.astype(np.int64)[:, None] >> np.arange(p)) & 1) > 0)
+    assert np.array_equal(got, expect)
+    # bit 30 reaches destination 30 and nothing else
+    assert got[2, 30] and got[2, :30].sum() == 0
+    # every destination of the full mask is hit: no sign-extension loss
+    assert got[1].all()

@@ -59,3 +59,71 @@ print("OK")
 def test_replicated_analytic_counters_match_hlo():
     out = run_multidevice(CROSSCHECK, ndev=8, timeout=900)
     assert "OK" in out
+
+
+PLAN_CROSSCHECK = """
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.core import oracle
+from repro.core.distributed import build_dist_graph
+from repro.core.distributed_sharded import (make_sharded_mst_step,
+                                            plan_sharded_msf)
+from repro.launch.roofline import collective_bytes_from_hlo, plan_summary
+from repro.data import generators
+
+p = 8
+mesh = Mesh(np.array(jax.devices()), ("data",))
+sh = NamedSharding(mesh, P("data"))
+u, v, w, n = generators.generate("gnm", 512, avg_degree=8.0, seed=3)
+g, cap = build_dist_graph(u, v, w, n, p)
+
+# config note: the two data-dependent while loops are avoided so the
+# HLO parser's trip weighting is exact — preprocessing off (its
+# contraction loop's trip count is data-dependent) and fixed-schedule
+# doubling (fori_loop: constant trip = log2(n), executed exactly);
+# everything else, ghost cache included, is straight-line in the
+# unrolled planned program.
+plan = plan_sharded_msf(g, n, mesh, axis_names=("data",),
+                        local_preprocessing=False,
+                        adaptive_doubling=False)
+step, specs = make_sharded_mst_step(n, g.cap_total, mesh, plan=plan)
+compiled = jax.jit(step, in_shardings=(sh,) * 4).lower(*specs).compile()
+out = compiled(g.u, g.v, g.w, g.eid)
+assert int(out[4]) == 0, int(out[4])
+kmask, kweight = oracle.kruskal(u, v, w, n)
+sel = np.unique(np.asarray(g.eid)[np.asarray(out[0])])
+assert np.array_equal(sel, np.nonzero(kmask)[0])
+st = out[5]
+
+coll = collective_bytes_from_hlo(compiled.as_text())
+# ExchangeStats.bytes books every routed exchange's capacity-padded
+# [p, C, ...] buffers (x hop count); the HLO side is the operand bytes
+# of the module's all-to-alls, trip-weighted.  Same quantity, measured
+# from opposite ends of the compiler.
+analytic_bytes = float(st.bytes)
+hlo_bytes = coll["all-to-all_bytes"]
+ratio = hlo_bytes / analytic_bytes
+# ... and ExchangeStats.calls books one invocation per buffer per hop,
+# the HLO parser counts trip-weighted all-to-all ops
+calls_ratio = coll["all-to-all_count"] / float(int(st.calls))
+print("rounds", plan.num_rounds, "analytic_bytes", analytic_bytes,
+      "hlo_bytes", hlo_bytes, "ratio", round(ratio, 4),
+      "calls", int(st.calls), "hlo_count", coll["all-to-all_count"],
+      "calls_ratio", round(calls_ratio, 4))
+print("plan_summary", {k: v for k, v in plan_summary(plan).items()
+                       if k.endswith(("_sum", "shrink"))})
+# same skew tolerance as the replicated-engine crosscheck: residual
+# slack comes only from compiler-materialized reshapes, so a counter or
+# parser regression (double counting, wrong trip weights, a phase
+# booking slots twice) lands far outside this band
+assert 0.7 < ratio < 1.5, (analytic_bytes, hlo_bytes, ratio)
+assert 0.7 < calls_ratio < 1.5, (int(st.calls), coll["all-to-all_count"])
+print("OK")
+"""
+
+
+def test_planned_program_counters_match_hlo():
+    """ISSUE 5 satellite: the unrolled plan path's ExchangeStats
+    hops/slots accounting vs the HLO collective parser, same tolerance
+    as the replicated engine."""
+    out = run_multidevice(PLAN_CROSSCHECK, ndev=8, timeout=900)
+    assert "OK" in out
