@@ -91,12 +91,20 @@ class DistGraph(NamedTuple):
 
 
 def build_dist_graph(u: np.ndarray, v: np.ndarray, w: np.ndarray, n: int,
-                     num_shards: int) -> Tuple[DistGraph, int]:
+                     num_shards: int,
+                     cap: Optional[int] = None) -> Tuple[DistGraph, int]:
     """Host-side: canonical undirected edges -> doubled, sorted, padded.
 
     Returns (graph, cap).  ``eid`` is the index into the *undirected*
     input arrays, so a result mask over slots can be reduced back to the
     input edges via eid.
+
+    ``cap`` pins the per-shard slot count instead of the exact
+    ``ceil(2m/p)`` (must be >= it): the serving gateway (ISSUE 6) pads
+    every request's capacity up to a shared ladder rung so that
+    same-family graphs of slightly different edge counts land on one
+    array shape — one ``RoundPlan``, one compiled program.  Padding
+    slots carry ``INVALID_W`` like any other tail padding.
     """
     m = len(u)
     eid = np.arange(m, dtype=np.int32)
@@ -107,7 +115,13 @@ def build_dist_graph(u: np.ndarray, v: np.ndarray, w: np.ndarray, n: int,
     order = np.lexsort((dw, dv, du))
     du, dv, dw, de = du[order], dv[order], dw[order], de[order]
     dm = len(du)
-    cap = max(1, -(-dm // num_shards))
+    need = max(1, -(-dm // num_shards))
+    if cap is None:
+        cap = need
+    elif cap < need:
+        raise ValueError(
+            f"cap={cap} cannot hold ceil(2m/p)={need} edge slots per "
+            f"shard (m={m}, p={num_shards})")
     uu = np.zeros(num_shards * cap, np.int32)
     vv = np.zeros(num_shards * cap, np.int32)
     ww = np.full(num_shards * cap, INVALID_W, np.float32)

@@ -309,14 +309,13 @@ def _vsorted_lookup(table: jax.Array, vidx: VIndex, valid: jax.Array,
     run-length win the slot-order v column cannot give); the answers fan
     out per run and back to original slot order through ``vidx.rank``.
 
-    Loop-closure note: this deliberately never gathers/scatters through
-    ``vidx.perm`` — run membership comes from a ``rank``-keyed scatter
-    and the fan-out from a run-indexed gather.  A closed-over
-    ``argsort`` permutation consumed by gathers *inside* a
-    ``lax.while_loop`` body miscompiles on the JAX 0.4.x CPU backend
-    (requests silently land on wrong rows; caught as phantom overflow by
-    the capacity accounting), while the derived run/rank arrays are
-    safe — so the round-path code only ever touches the latter.
+    This gathers/scatters through the derived run/rank arrays rather
+    than ``vidx.perm`` directly.  (Historical: an early JAX 0.4.x CPU
+    backend miscompiled a closed-over ``argsort`` permutation gathered
+    inside a ``lax.while_loop`` body; the pinned 0.4.37 no longer
+    reproduces it — tests/test_serve_msf.py pins the repro pattern —
+    and the run/rank form is kept because it is also what the
+    coalesced-reply fan-out needs.)
     """
     names = tuple(axes)
     head, head_idx, run_id = vidx.runs
@@ -1866,6 +1865,119 @@ def _build_planned_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
     return jax.jit(compat.shard_map(
         fn, mesh=mesh, in_specs=(spec,) * 4,
         out_specs=(spec, P(), P(), spec, P(), P(), P())))
+
+
+@functools.lru_cache(maxsize=32)
+def _build_planned_batch_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
+                            axes: Tuple[str, ...], plan: RoundPlan):
+    """The batched planned executor (ISSUE 6): one compiled program
+    serving B same-shape graphs per dispatch.
+
+    ``jax.vmap`` of the per-shard planned program over a leading batch
+    axis, inside ``shard_map``: the mesh collectives (psum / pmax /
+    all_to_all) operate over the *named* axes and batch elementwise
+    over the unnamed vmap axis, so B graphs cost one compiled program
+    and one collective sequence of B-fold payload.  Inputs are stacked
+    ``[B, p * cap]`` edge arrays sharded on dim 1; outputs keep the
+    per-request axis — ``mask``/``lab`` are ``[B, p * cap]`` /
+    ``[B, p * vps]`` and every scalar (weight, count, **overflow,
+    residual**) is a ``[B]`` vector, so one ill-fitting request is
+    visible — and replannable — on its own, without poisoning its
+    batchmates (``execute_plan_batched``).
+    """
+    fn = jax.vmap(partial(_planned_shard_fn, n=n, vps=vps, axes=axes,
+                          plan=plan))
+    spec = P(None, axes)
+    rep = P(None)
+    return jax.jit(compat.shard_map(
+        fn, mesh=mesh, in_specs=(spec,) * 4,
+        out_specs=(spec, rep, rep, spec, rep, rep, rep)))
+
+
+def execute_plan_batched(graphs: Sequence[DistGraph], n: int,
+                         mesh: jax.sharding.Mesh, plan: RoundPlan, *,
+                         axis_names: Optional[Sequence[str]] = None,
+                         replan: bool = True,
+                         stack: bool = True):
+    """Replay one measured ``RoundPlan`` on B same-shape graphs at once.
+
+    The batch is stacked to ``[B, p * cap]`` and served through the
+    vmapped planned program (``_build_planned_batch_fn``) in a single
+    dispatch.  Per-request overflow / residual accounting keeps the
+    never-silent contract *independently per request*: requests the
+    plan fits are returned from the batched run as-is; each request the
+    plan does not fit is re-solved by its own fresh measured pass
+    (``replan=True``, the serving default) or the whole call raises
+    naming the offending batch indices (``replan=False``).
+
+    Returns ``(results, replanned)``: ``results[i]`` is the engine's
+    standard 6-tuple ``(mask, weight, count, labels, overflow, stats)``
+    for ``graphs[i]`` (overflow 0 for every request, replanned or not),
+    and ``replanned`` is the tuple of batch indices that fell back —
+    the serving gateway's drift signal.
+
+    ``stack=False`` asserts the caller already stacked the arrays
+    (``graphs`` is then one ``DistGraph`` of ``[B, p * cap]`` arrays).
+    """
+    axes = tuple(axis_names or mesh.axis_names)
+    p = 1
+    for a in axes:
+        p *= mesh.shape[a]
+    vps = vertices_per_shard(n, p)
+    if stack:
+        for g in graphs:
+            _validate_plan_shape(plan, n, p, g.cap_total // p)
+        batch_size = len(graphs)
+        batched = DistGraph(
+            jnp.stack([g.u for g in graphs]),
+            jnp.stack([g.v for g in graphs]),
+            jnp.stack([g.w for g in graphs]),
+            jnp.stack([g.eid for g in graphs]))
+
+        def graph_at(i):
+            return graphs[i]
+    else:
+        batched = graphs
+        batch_size = int(batched.u.shape[0])
+        _validate_plan_shape(plan, n, p, int(batched.u.shape[1]) // p)
+
+        def graph_at(i):   # only materialized for replanned requests
+            return DistGraph(batched.u[i], batched.v[i], batched.w[i],
+                             batched.eid[i])
+    fn = _build_planned_batch_fn(n, vps, mesh, axes, plan)
+    mask, weight, count, lab, ovf, residual, comm = fn(
+        batched.u, batched.v, batched.w, batched.eid)
+    ovf_h = np.asarray(ovf)
+    res_h = np.asarray(residual)
+    bad = tuple(int(i) for i in
+                np.nonzero((ovf_h != 0) | (res_h != 0))[0])
+    if bad and not replan:
+        raise RuntimeError(
+            f"plan replay does not fit batch requests {list(bad)} "
+            f"(overflow={[int(ovf_h[i]) for i in bad]}, residual="
+            f"{[int(res_h[i]) for i in bad]}); pad the plan, re-measure "
+            "with plan_sharded_msf, or allow replan=True")
+    results = []
+    for i in range(batch_size):
+        if i in bad:
+            # this request alone falls back to one fresh measured pass
+            # with the plan's frozen levers; batchmates keep their
+            # batched results untouched
+            results.append(distributed_sharded_msf(
+                graph_at(i), n, mesh, algorithm=plan.algorithm,
+                axis_names=axes, num_levels=len(plan.level_bounds),
+                schedule=plan.schedule,
+                local_preprocessing=plan.local_preprocessing,
+                coalesce=plan.coalesce, src_only=plan.src_only,
+                adaptive_doubling=plan.adaptive_doubling,
+                shrink_capacities=True,
+                ghost_cache=plan.ghost is not None,
+                relabel_skip=plan.relabel_skip,
+                vsorted_index=plan.vsorted_index))
+        else:
+            results.append((mask[i], weight[i], count[i], lab[i],
+                            ovf[i], CommStats(*(f[i] for f in comm))))
+    return results, bad
 
 
 def _validate_plan_shape(plan: RoundPlan, n: int, p: int,

@@ -194,6 +194,28 @@ class RoundPlan(NamedTuple):
                                  self.label_capacity_full))
         return self._replace(rounds=rounds, ghost=ghost)
 
+    # -- serving cache identity --------------------------------------------
+
+    def cache_key(self, family: str = "") -> str:
+        """The stable serving-cache identity of this plan (ISSUE 6).
+
+        Delegates to :func:`plan_cache_key` with the plan's own shape /
+        algorithm / lever fields, so a gateway can compute the same key
+        *before* a plan exists (from the request's family, shape and
+        lever flags) and after measurement (from the plan itself) and
+        get one cache slot.  ``family`` is the traffic label the plan
+        was measured under — it is not a plan field because capacity
+        schedules, not plans, differ per family.
+        """
+        return plan_cache_key(
+            family, self.n, self.num_shards, self.cap_per_shard,
+            self.algorithm, schedule=self.schedule,
+            local_preprocessing=self.local_preprocessing,
+            coalesce=self.coalesce, src_only=self.src_only,
+            adaptive_doubling=self.adaptive_doubling,
+            relabel_skip=self.relabel_skip,
+            vsorted_index=self.vsorted_index)
+
     # -- serialization -----------------------------------------------------
 
     def to_json(self, indent: Optional[int] = None) -> str:
@@ -217,6 +239,35 @@ class RoundPlan(NamedTuple):
         return cls(**d).validate()
 
 
+def plan_cache_key(family: str, n: int, num_shards: int,
+                   cap_per_shard: int, algorithm: str = "boruvka", *,
+                   schedule: str = "grid",
+                   local_preprocessing: bool = True,
+                   coalesce: bool = True, src_only: bool = True,
+                   adaptive_doubling: bool = True,
+                   relabel_skip: bool = True,
+                   vsorted_index: bool = True) -> str:
+    """Stable plan-cache key: (family, n, edge-cap rung, algorithm,
+    levers).
+
+    ``cap_per_shard`` should already be a ``shrink_schedule`` ladder
+    rung (the serving gateway pads every admitted graph's per-shard
+    edge capacity up to a rung via ``quantize_capacity`` before
+    building it), so structurally similar graphs of one family land on
+    one key → one measured plan → one compiled program.  The ghost
+    cache is deliberately absent: whether a plan carries ghost tables
+    is derived deterministically from these inputs and the mesh
+    (``ghost_cache`` auto-disable above ``MAX_GHOST_SHARDS``), so
+    including it would only split cache slots that execute identically.
+    """
+    levers = "".join(
+        "1" if f else "0"
+        for f in (local_preprocessing, coalesce, src_only,
+                  adaptive_doubling, relabel_skip, vsorted_index))
+    return (f"{family}|n{int(n)}|p{int(num_shards)}|c{int(cap_per_shard)}"
+            f"|{algorithm}|{schedule}|{levers}")
+
+
 def _enc(x: float):
     """±inf-safe JSON encoding for the level weight windows."""
     if math.isinf(x):
@@ -228,9 +279,25 @@ def _dec(x) -> float:
     return float(x)
 
 
+# Per-family MINEDGES decay models, fit to the measured schedules of
+# EXPERIMENTS §Shrinking capacity schedule (n=4096, p=8, seed 3):
+#   gnm:   the candidate exchange is bounded by one item per source
+#          vertex per shard, so cap_edge *plateaus* at the
+#          vertices-per-shard rung (measured: 512 every round);
+#   rgg2d: locality-ordered geometric graphs contract geometrically,
+#          so cap_edge starts at the cap/p rung and *halves* each
+#          round (measured: 500 250 125 63 63 32).
+# (start, step) = (rung of the first round, rungs descended per round).
+_FAMILY_EDGE_DECAY = {
+    "gnm": ("vps", 0),
+    "rgg2d": ("cap_over_p", 1),
+}
+
+
 def synthetic_plan(n: int, cap_total: int, num_shards: int, *,
                    algorithm: str = "boruvka", schedule: str = "grid",
-                   local_preprocessing: bool = True) -> RoundPlan:
+                   local_preprocessing: bool = True,
+                   family: Optional[str] = None) -> RoundPlan:
     """An unmeasured geometric-ladder plan for AOT costing (dry-run).
 
     Encodes the paper's contraction assumption directly — Borůvka at
@@ -242,24 +309,48 @@ def synthetic_plan(n: int, cap_total: int, num_shards: int, *,
     it on a real graph is legal but may report overflow / residual
     rounds and replan, exactly like any other ill-fitting plan.
 
+    ``family`` (ISSUE 6) calibrates the MINEDGES trajectory to a
+    traffic family's measured decay instead of the generic full-cap
+    halving: ``"gnm"`` plateaus ``cap_edge`` at the vertices-per-shard
+    rung, ``"rgg2d"`` halves from the cap/p rung
+    (``_FAMILY_EDGE_DECAY``; both within one ladder rung of the
+    measured plan at n=4096/p=8 — pinned by tests/test_serve_msf.py).
+    ``None`` keeps the conservative generic ladder.
+
     Conservative lever choices (no ghost cache, no settled skip): the
     synthesized capacities have no host mirror to make them exact, so
     the plan sticks to the paths whose floors degrade to reported
     overflow rather than extra structure.
     """
-    from repro.core.distributed import shrink_schedule
+    from repro.core.distributed import quantize_capacity, shrink_schedule
     cap = max(1, cap_total // num_shards)
     vps = max(1, -(-n // num_shards))
     rounds_n = max(1, math.ceil(math.log2(max(n, 2))) + 1)
     edge_l = shrink_schedule(cap)
     lab_l = shrink_schedule(vps)
 
+    if family is None:
+        start_idx, step = 0, 1
+    else:
+        if family not in _FAMILY_EDGE_DECAY:
+            raise ValueError(
+                f"no calibrated decay model for family {family!r} "
+                f"(known: {sorted(_FAMILY_EDGE_DECAY)}); pass "
+                "family=None for the generic halving ladder")
+        anchor, step = _FAMILY_EDGE_DECAY[family]
+        first = min(vps, cap) if anchor == "vps" \
+            else max(1, -(-cap // num_shards))
+        start_idx = edge_l.index(quantize_capacity(first, cap))
+
     def rung(ladder, r):
         return ladder[min(r, len(ladder) - 1)]
 
+    def edge_rung(r):
+        return edge_l[min(start_idx + step * r, len(edge_l) - 1)]
+
     rounds = tuple(
-        RoundSpec(level=0, cap_edge=rung(edge_l, r),
-                  cap_lookup=rung(edge_l, r),
+        RoundSpec(level=0, cap_edge=edge_rung(r),
+                  cap_lookup=edge_rung(r),
                   cap_contract=rung(lab_l, r), cap_relabel=vps,
                   cap_push=1, ghost=False,
                   sentinel=(r == rounds_n - 1))

@@ -8,8 +8,9 @@ temperature sampling.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +27,9 @@ class Request:
     max_new: int = 16
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # prompt tokens not yet teacher-forced through the decode path;
+    # owned by the engine from admission (_fill_slots) to end of prefill
+    _pending: List[int] = dataclasses.field(default_factory=list)
 
 
 class ServeEngine:
@@ -40,18 +44,24 @@ class ServeEngine:
         self.caches = init_caches(cfg, self.B, self.T)
         self.pos = np.zeros(self.B, np.int32)
         self.slot_req: List[Optional[Request]] = [None] * self.B
-        self.queue: List[Request] = []
+        self.queue: Deque[Request] = collections.deque()
         self.key = jax.random.key(seed)
         self._step = jax.jit(
             lambda p, c, t, q: forward_decode(cfg, p, c, t, q))
 
     def submit(self, req: Request) -> None:
+        if not req.prompt:
+            # step() seeds decode from prompt[-1]; an empty prompt has
+            # no seed token and would IndexError mid-batch — reject at
+            # admission so one bad request cannot stall a full slot pool
+            raise ValueError(f"request {req.rid}: empty prompt "
+                             "(decode needs >= 1 seed token)")
         self.queue.append(req)
 
     def _fill_slots(self) -> None:
         for b in range(self.B):
             if self.slot_req[b] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue.popleft()
                 self.slot_req[b] = req
                 self.pos[b] = 0
                 # prompt is consumed token-by-token (teacher-forced

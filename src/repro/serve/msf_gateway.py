@@ -1,0 +1,248 @@
+"""MSF serving gateway (ISSUE 6): plan-LRU + continuous batching.
+
+The "compile once, serve heavy traffic" loop the RoundPlan machinery
+(ISSUE 5) was built for.  A stream of graph requests is admitted into a
+queue; the gateway groups same-key requests into batches and serves
+each batch through **one** compiled planned program — ``jax.vmap`` of
+the per-shard plan executor over a leading batch axis
+(``core/distributed_sharded.py: execute_plan_batched``) — so B graphs
+cost one dispatch.
+
+Request lifecycle::
+
+    submit(req)
+      └─ cache key = plan_cache_key(family, n, p, cap rung, algorithm,
+         levers)   — the per-shard edge capacity is padded UP to the
+         next power-of-two rung, so same-family graphs of slightly
+         different edge counts land on one array shape → one plan →
+         one compiled program
+    step()
+      ├─ admit up to ``batch_slots`` queued requests sharing the
+      │  queue head's key (continuous batching; other keys keep their
+      │  queue order)
+      ├─ plan-LRU lookup
+      │    hit  → reuse the cached padded plan
+      │    miss → measure once on the first request's graph
+      │           (``plan_sharded_msf``), ``pad(pad_margin)``, insert;
+      │           evict the least-recently-used entry beyond
+      │           ``cache_size``
+      ├─ batched planned execution; per-request overflow / residual is
+      │  surfaced independently, so an ill-fitting request replans
+      │  alone (one fresh measured pass) without poisoning batchmates
+      └─ drift: each entry tracks its replan rate; past
+         ``replan_threshold`` (with ``min_samples`` observations) the
+         entry is re-measured from a drifted graph and refreshed with
+         ``pad(pad_margin)`` headroom
+
+Every result carries the engine's exactness contract: overflow 0
+(batched fit or replanned), reducible to the undirected input edge set
+via ``eid``.  The slot-pool substrate this models itself on is
+``serve/engine.py``; the accounting mirrors its queue/slot structure
+with plans in place of KV caches.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+
+from repro.core.distributed import build_dist_graph
+from repro.core.distributed_sharded import (execute_plan_batched,
+                                            plan_sharded_msf)
+from repro.core.plan import RoundPlan, plan_cache_key
+
+
+@dataclasses.dataclass
+class MSFRequest:
+    """One graph to solve: undirected edge arrays + vertex count.
+
+    ``family`` is the traffic label used for plan-cache keying (a wrong
+    label can only cost replans, never correctness).  Results are
+    filled by the gateway: ``edges`` are indices into the request's
+    undirected input arrays, ``weight``/``count`` the forest weight and
+    edge count, ``served_via`` is ``"batched"`` or ``"replanned"``.
+    """
+    rid: int
+    family: str
+    u: np.ndarray
+    v: np.ndarray
+    w: np.ndarray
+    n: int
+    edges: Optional[np.ndarray] = None
+    weight: float = 0.0
+    count: int = 0
+    done: bool = False
+    served_via: str = ""
+    latency: float = 0.0
+    _t_submit: float = 0.0
+
+
+@dataclasses.dataclass
+class GatewayStats:
+    submitted: int = 0
+    served: int = 0
+    batches: int = 0
+    hits: int = 0          # plan-cache lookups that found an entry
+    misses: int = 0        # lookups that measured a fresh plan
+    evictions: int = 0     # LRU entries dropped at capacity
+    replans: int = 0       # requests that fell back to a measured pass
+    refreshes: int = 0     # drift-triggered entry re-measurements
+
+    @property
+    def hit_rate(self) -> float:
+        lookups = self.hits + self.misses
+        return self.hits / lookups if lookups else 0.0
+
+    @property
+    def replan_rate(self) -> float:
+        return self.replans / self.served if self.served else 0.0
+
+
+@dataclasses.dataclass
+class _CacheEntry:
+    plan: RoundPlan
+    cap: int               # the padded per-shard capacity (ladder rung)
+    served: int = 0        # requests executed under this entry
+    replans: int = 0       # ... of which fell back to a measured pass
+
+
+class MSFGateway:
+    """Continuous-batching MSF server over one device mesh."""
+
+    def __init__(self, mesh: jax.sharding.Mesh, *,
+                 axis_names: Optional[Sequence[str]] = None,
+                 algorithm: str = "boruvka",
+                 cache_size: int = 8, batch_slots: int = 4,
+                 pad_margin: float = 0.25,
+                 replan_threshold: float = 0.34, min_samples: int = 6):
+        self.mesh = mesh
+        self.axes = tuple(axis_names or mesh.axis_names)
+        self.p = 1
+        for a in self.axes:
+            self.p *= mesh.shape[a]
+        self.algorithm = algorithm
+        self.cache_size = int(cache_size)
+        self.batch_slots = int(batch_slots)
+        self.pad_margin = float(pad_margin)
+        self.replan_threshold = float(replan_threshold)
+        self.min_samples = int(min_samples)
+        self.queue: Deque[MSFRequest] = collections.deque()
+        # key -> entry; OrderedDict insertion/move order IS the LRU order
+        self.cache: "collections.OrderedDict[str, _CacheEntry]" = \
+            collections.OrderedDict()
+        self.stats = GatewayStats()
+
+    # -- keying ------------------------------------------------------------
+
+    def _cap_rung(self, req: MSFRequest) -> int:
+        """Per-shard edge capacity padded up to the power-of-two ladder."""
+        need = max(1, -(-2 * len(req.u) // self.p))
+        return 1 << (need - 1).bit_length()
+
+    def _key(self, req: MSFRequest) -> str:
+        return plan_cache_key(req.family, req.n, self.p,
+                              self._cap_rung(req), self.algorithm)
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, req: MSFRequest) -> None:
+        if req.n < 1:
+            raise ValueError(f"request {req.rid}: n must be >= 1")
+        if not (len(req.u) == len(req.v) == len(req.w)):
+            raise ValueError(
+                f"request {req.rid}: edge arrays disagree in length "
+                f"({len(req.u)}/{len(req.v)}/{len(req.w)})")
+        req._t_submit = time.monotonic()
+        self.queue.append(req)
+        self.stats.submitted += 1
+
+    # -- serving -----------------------------------------------------------
+
+    def step(self) -> List[MSFRequest]:
+        """Serve one batch: admit same-key requests, execute, fill results.
+
+        Returns the list of requests completed by this step (empty if
+        the queue was empty).
+        """
+        if not self.queue:
+            return []
+        key = self._key(self.queue[0])
+        batch: List[MSFRequest] = []
+        rest: Deque[MSFRequest] = collections.deque()
+        while self.queue:
+            r = self.queue.popleft()
+            if len(batch) < self.batch_slots and self._key(r) == key:
+                batch.append(r)
+            else:
+                rest.append(r)
+        self.queue = rest
+
+        cap = self._cap_rung(batch[0])
+        n = batch[0].n
+        graphs = [build_dist_graph(r.u, r.v, r.w, n, self.p, cap=cap)[0]
+                  for r in batch]
+
+        entry = self.cache.get(key)
+        if entry is not None:
+            self.cache.move_to_end(key)
+            self.stats.hits += 1
+        else:
+            self.stats.misses += 1
+            entry = self._measure(key, graphs[0], n, cap)
+
+        results, replanned = execute_plan_batched(
+            graphs, n, self.mesh, entry.plan, axis_names=self.axes,
+            replan=True)
+        entry.served += len(batch)
+        entry.replans += len(replanned)
+        self.stats.replans += len(replanned)
+
+        # drift: a key whose traffic keeps outgrowing its plan gets one
+        # fresh measurement (off a graph that actually overflowed) and
+        # new pad() headroom, instead of replanning forever
+        if (replanned and entry.served >= self.min_samples
+                and entry.replans / entry.served > self.replan_threshold):
+            self._measure(key, graphs[replanned[-1]], n, cap)
+            self.stats.refreshes += 1
+
+        now = time.monotonic()
+        for i, (req, res) in enumerate(zip(batch, results)):
+            mask = np.asarray(res[0])
+            eid = np.asarray(graphs[i].eid)
+            req.edges = np.unique(eid[mask])
+            req.weight = float(res[1])
+            req.count = int(res[2])
+            req.served_via = "replanned" if i in replanned else "batched"
+            req.latency = now - req._t_submit
+            req.done = True
+        self.stats.served += len(batch)
+        self.stats.batches += 1
+        return batch
+
+    def run(self, max_steps: int = 100_000) -> None:
+        steps = 0
+        while self.queue and steps < max_steps:
+            self.step()
+            steps += 1
+
+    # -- plan lifecycle ----------------------------------------------------
+
+    def _measure(self, key: str, graph, n: int, cap: int) -> _CacheEntry:
+        """Measure a plan off ``graph``, pad it, (re)install the entry."""
+        plan = plan_sharded_msf(graph, n, self.mesh,
+                                algorithm=self.algorithm,
+                                axis_names=self.axes)
+        assert plan.cache_key(key.split("|", 1)[0]) == key, \
+            (plan.cache_key(key.split("|", 1)[0]), key)
+        entry = _CacheEntry(plan=plan.pad(self.pad_margin), cap=cap)
+        self.cache[key] = entry
+        self.cache.move_to_end(key)
+        while len(self.cache) > self.cache_size:
+            self.cache.popitem(last=False)
+            self.stats.evictions += 1
+        return entry

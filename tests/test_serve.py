@@ -1,6 +1,10 @@
 """Serving engine: batched decode slots, prompt prefill, refill."""
+import collections
+import dataclasses
+
 import jax
 import numpy as np
+import pytest
 
 from repro.configs.base import get_arch
 from repro.models.model import init_params
@@ -20,6 +24,38 @@ def test_engine_completes_requests():
         assert r.done
         assert len(r.out) == 5
         assert all(0 <= t < cfg.vocab_size for t in r.out)
+
+
+def test_request_pending_is_declared_field():
+    """ISSUE 6 regression: ``_pending`` used to be injected onto
+    Request instances by ``_fill_slots`` — undeclared, so dataclass
+    tooling (replace/asdict/fields) never saw it and a request object
+    grew engine-private state only after admission."""
+    names = {f.name for f in dataclasses.fields(Request)}
+    assert "_pending" in names
+    r = Request(rid=0, prompt=[1, 2])
+    assert r._pending == []           # present before any engine touch
+    assert dataclasses.replace(r, rid=1)._pending == []
+
+
+def test_engine_rejects_empty_prompt_and_admits_fifo():
+    """ISSUE 6 regression: an empty prompt used to IndexError at
+    ``req.prompt[-1]`` mid-``step()`` — after admission, killing the
+    whole batch; now it is rejected at ``submit``.  Also pins the
+    deque-based O(1) FIFO admission."""
+    cfg = get_arch("qwen2-1.5b").smoke
+    params = init_params(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, batch_slots=1, max_len=32)
+    assert isinstance(eng.queue, collections.deque)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(rid=9, prompt=[]))
+    assert not eng.queue              # rejected before queueing
+    reqs = [Request(rid=i, prompt=[i + 1], max_new=2) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    assert [r.rid for r in eng.queue] == [0, 1, 2]
+    eng.run()
+    assert all(r.done and len(r.out) == 2 for r in reqs)
 
 
 def test_engine_greedy_matches_manual_decode():
