@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro import compat
+from repro.comm import faults
 from repro.comm.grid_alltoall import all_to_all_nd
 
 
@@ -75,6 +76,13 @@ class ExchangeStats(NamedTuple):
         never more; the primitives below only ever *carry* these fields
         through (``_replace``), so a caller cannot double-book a call by
         threading the same accumulator into both legs.
+      * ``injected`` — float32 count of items affected by an active
+        fault-injection plan (``comm/faults.py``, ISSUE 7), psum'd like
+        ``items``: suppressed (stall), corrupted, misrouted, clipped or
+        dropped items each count once at the exchange that faulted
+        them, so a chaos run can assert every injected fault is
+        attributable.  Always 0 outside ``faults.inject`` — the fault
+        hooks trace no code when no plan is active.
       * ``hits`` / ``misses`` / ``pushed`` — float32 ghost-label-cache
         counters (ISSUE 4), psum'd like ``items``.  ``misses`` counts
         routed endpoint-lookup request items (with the cache disabled
@@ -103,13 +111,14 @@ class ExchangeStats(NamedTuple):
     hits: jax.Array    # [] float32 — ghost-cache label reads served locally
     misses: jax.Array  # [] float32 — routed endpoint-lookup request items
     pushed: jax.Array  # [] float32 — dirty labels multicast to subscribers
+    injected: jax.Array  # [] float32 — fault-injected items (ISSUE 7)
 
     @staticmethod
     def zeros() -> "ExchangeStats":
         return ExchangeStats(jnp.int32(0), jnp.float32(0.0),
                              jnp.float32(0.0), jnp.float32(0.0),
                              jnp.float32(0.0), jnp.float32(0.0),
-                             jnp.float32(0.0))
+                             jnp.float32(0.0), jnp.float32(0.0))
 
 
 def _hops(axis_names: Sequence[str], schedule: str) -> int:
@@ -157,20 +166,41 @@ def _group_positions(dest: jax.Array, valid: jax.Array, p: int) -> jax.Array:
 def routed_exchange(payload, dest: jax.Array, valid: jax.Array,
                     capacity: int, axis_names: Sequence[str],
                     schedule: str = "grid",
-                    stats: Optional[ExchangeStats] = None) -> ExchangeResult:
+                    stats: Optional[ExchangeStats] = None,
+                    site: str = "") -> ExchangeResult:
     """Deliver ``payload[i]`` to shard ``dest[i]``; static [p, C] buffers.
 
     ``payload`` is a pytree of [L, ...] arrays.  Must run inside shard_map
     with all ``axis_names`` present.  When ``stats`` is given, the result's
     ``stats`` field carries it plus this exchange's contribution.
+
+    ``site`` labels this call for fault injection (``comm/faults.py``,
+    ISSUE 7): while a ``FaultPlan`` is active, specs matching the label
+    are applied at trace time and the affected-item count rides
+    ``stats.injected``.  With no active plan (the default, and always
+    outside ``faults.inject``) the fault hooks trace nothing — the
+    fault-free program is bit-identical to one built before this
+    parameter existed.
     """
     names = tuple(axis_names)
     p = 1
     for n in names:
         p *= compat.axis_size(n)
     L = dest.shape[0]
+    cap_ok = capacity
+    fspecs = faults.specs_for(site)
+    inj = None
+    if fspecs:
+        payload, dest, valid, cap_ok, inj = faults.apply_send(
+            fspecs, faults.active().seed, site, payload, dest, valid,
+            capacity, p, names)
     pos = _group_positions(dest, valid, p)
-    ok = valid & (pos < capacity) & (dest >= 0) & (dest < p)
+    ok = valid & (pos < cap_ok) & (dest >= 0) & (dest < p)
+    if fspecs and cap_ok < capacity:
+        # clip: the admission rows a genuine capacity would have taken
+        # are forced overflow — charge them to the injected counter too
+        inj = inj + jnp.sum((valid & (pos >= cap_ok)
+                             & (pos < capacity)).astype(jnp.float32))
     # predicated scatter: out-of-range rows are dropped
     d_idx = jnp.where(ok, dest, p)
     s_idx = jnp.where(ok, pos, 0)
@@ -188,6 +218,10 @@ def routed_exchange(payload, dest: jax.Array, valid: jax.Array,
         d_idx, s_idx].set(ok, mode="drop")
     recv = jax.tree.map(lambda b: all_to_all_nd(b, names, schedule), send)
     recv_ok = all_to_all_nd(send_mask, names, schedule)
+    if fspecs:
+        recv_ok, inj_r = faults.apply_recv(fspecs, faults.active().seed,
+                                           site, recv_ok, names)
+        inj = inj + inj_r
     overflow = lax.psum(jnp.sum((valid & ~ok).astype(jnp.int32)), names)
     if stats is not None:
         h = _hops(names, schedule)
@@ -198,6 +232,9 @@ def routed_exchange(payload, dest: jax.Array, valid: jax.Array,
                                items=stats.items + items,
                                bytes=stats.bytes + jnp.float32(by * h),
                                slots=stats.slots + jnp.float32(p * capacity))
+        if fspecs:
+            stats = stats._replace(
+                injected=stats.injected + lax.psum(inj, names))
     return ExchangeResult(recv, recv_ok, ok, dest, pos, overflow, stats)
 
 
@@ -264,7 +301,8 @@ class ScatterResult(NamedTuple):
 def scatter_updates(payload, dest_mask: jax.Array, valid: jax.Array,
                     capacity: int, axis_names: Sequence[str],
                     schedule: str = "grid",
-                    stats: Optional[ExchangeStats] = None) -> ScatterResult:
+                    stats: Optional[ExchangeStats] = None,
+                    site: str = "") -> ScatterResult:
     """Multicast ``payload[i]`` to every shard set in bitmask ``dest_mask[i]``.
 
     The push-style dual of ``routed_exchange``: no request leg, no reply
@@ -290,9 +328,19 @@ def scatter_updates(payload, dest_mask: jax.Array, valid: jax.Array,
     for n in names:
         p *= compat.axis_size(n)
     L = dest_mask.shape[0]
+    cap_ok = capacity
+    fspecs = faults.specs_for(site)
+    inj = None
+    if fspecs:
+        payload, dest_mask, valid, cap_ok, inj = faults.apply_send_scatter(
+            fspecs, faults.active().seed, site, payload, dest_mask,
+            valid, capacity, p, names)
     want = _mask_to_copies(dest_mask, valid, p)
     pos = jnp.cumsum(want.astype(jnp.int32), axis=0) - 1     # [L, p]
-    ok = want & (pos < capacity)
+    ok = want & (pos < cap_ok)
+    if fspecs and cap_ok < capacity:
+        inj = inj + jnp.sum((want & (pos >= cap_ok)
+                             & (pos < capacity)).astype(jnp.float32))
     d_idx = jnp.where(ok, jnp.arange(p, dtype=jnp.int32)[None, :], p)
     s_idx = jnp.where(ok, pos, 0)
 
@@ -307,6 +355,10 @@ def scatter_updates(payload, dest_mask: jax.Array, valid: jax.Array,
         d_idx, s_idx].set(ok, mode="drop")
     recv = jax.tree.map(lambda b: all_to_all_nd(b, names, schedule), send)
     recv_ok = all_to_all_nd(send_mask, names, schedule)
+    if fspecs:
+        recv_ok, inj_r = faults.apply_recv(fspecs, faults.active().seed,
+                                           site, recv_ok, names)
+        inj = inj + inj_r
     overflow = lax.psum(jnp.sum((want & ~ok).astype(jnp.int32)), names)
     if stats is not None:
         h = _hops(names, schedule)
@@ -317,19 +369,24 @@ def scatter_updates(payload, dest_mask: jax.Array, valid: jax.Array,
                                items=stats.items + items,
                                bytes=stats.bytes + jnp.float32(by * h),
                                slots=stats.slots + jnp.float32(p * capacity))
+        if fspecs:
+            stats = stats._replace(
+                injected=stats.injected + lax.psum(inj, names))
     return ScatterResult(recv, recv_ok, ok, overflow, stats)
 
 
 def request_reply(request, dest: jax.Array, valid: jax.Array,
                   answer_fn: Callable, capacity: int,
-                  axis_names: Sequence[str], schedule: str = "grid"
+                  axis_names: Sequence[str], schedule: str = "grid",
+                  site: str = ""
                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """EXCHANGELABELS pattern: ship requests home, answer, ship answers back.
 
     ``answer_fn(recv, recv_ok) -> answers`` runs on the home shard with
     [p, C, ...] inputs.  Returns (answers[L, ...], answered[L] bool,
     overflow count)."""
-    ex = routed_exchange(request, dest, valid, capacity, axis_names, schedule)
+    ex = routed_exchange(request, dest, valid, capacity, axis_names, schedule,
+                         site=site)
     answers = answer_fn(ex.recv, ex.recv_ok)
     out = reply(ex, answers, axis_names, schedule)
     return out, ex.sent_ok, ex.overflow

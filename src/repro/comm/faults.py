@@ -1,0 +1,286 @@
+"""Deterministic fault injection for the capacity-bounded exchanges
+(ISSUE 7).
+
+The engine's robustness contract is "overflow never silent" — but until
+this module nothing between ``comm/exchange.py`` and the serving
+gateway had ever been *tested* against an injected fault.  A
+``FaultPlan`` describes a seeded, reproducible set of faults; while one
+is active (``inject``), ``routed_exchange`` / ``scatter_updates`` apply
+the matching specs at trace time and book every affected item into
+``ExchangeStats.injected``, so a chaos run can assert the global
+invariant end to end: every injected fault is either **detected**
+(nonzero overflow, a raised replay error, or a ``VerifyFailure``) or
+**tolerated** (bit-identical final MSF) — never silent
+(``launch/chaos.py``).
+
+Fault classes (``FaultSpec.kind``):
+
+  * ``clip``         — capacity starvation: the send-side admission test
+    runs at ``max(1, int(capacity * cap_frac))`` while the buffers keep
+    their static shape, forcing the overflow counter to fire exactly as
+    a genuinely undersized capacity would.  Detected at the transport
+    layer by construction.
+  * ``corrupt``      — payload corruption: a deterministic ``fraction``
+    of valid items get bit ``bit`` of every float32 payload leaf
+    XOR-flipped (weight bit-flips in MINEDGES candidates).  Silent at
+    the transport layer — detection must come from the algorithm layer
+    (verify checksum / oracle), which is the point of the harness.
+  * ``shuffle_dest`` — misrouting: selected items' destinations rotate
+    to ``(dest + 1) % p`` (``routed_exchange``) or their subscriber
+    bitmask rotates one shard left (``scatter_updates``).  The rotated
+    destination is still in range, so the transport accepts it; the
+    wrong shard answers.
+  * ``drop``         — receive-side slot drops: delivered slots are
+    cleared from ``recv_ok`` *after* the exchange; the sender still
+    sees ``sent_ok`` True and the overflow counter does not move —
+    the strictest silent-loss model the transport allows.
+  * ``stall``        — per-shard stall: shard ``shard`` contributes no
+    items to this exchange (its ``valid`` mask is cleared *before* the
+    overflow computation, so the stall is not self-detecting).
+
+Determinism: item selection is a pure function of
+``(plan.seed, spec site, item index, shard index)`` — an integer hash
+evaluated at trace time, no RNG state — so a chaos cell reproduces
+bit-identically across runs and JIT retraces.
+
+jit/lru-cache staleness: the engine memoizes its compiled programs
+(``functools.lru_cache`` around every shard_map builder), so flipping a
+module global would be invisible to already-compiled code.  Builders
+therefore register their ``cache_clear`` here
+(``register_cache_clear``) and ``inject`` clears them on entry **and**
+exit: entering forces a retrace with the faulted exchange code, leaving
+restores a pristine fault-free compilation — which is how the
+fault-free path stays bit-identical to the oracle after any number of
+chaos cells.  Only registered builders get this guarantee; other
+``comm/exchange.py`` callers (the MoE dispatch layers) are unaffected
+unless they opt in.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+FAULT_KINDS = ("clip", "corrupt", "shuffle_dest", "drop", "stall")
+
+
+class FaultSpec(NamedTuple):
+    """One injectable fault.  ``site`` targets a labelled exchange call
+    site of the engine (``"minedges"``, ``"lookup"``, ``"contract"``,
+    ``"relabel"``, ``"push"``, ``"prep"``, ``"fill"``, ``"subscribe"``);
+    the empty default matches every site except ``"verify"`` — the
+    self-check of ``core/verify.py`` must stay trustworthy under
+    injection or chaos could never classify an outcome."""
+    kind: str
+    site: str = ""            # "" = any engine site (never "verify")
+    fraction: float = 1.0     # of valid items affected (corrupt/drop/
+    #                           shuffle_dest); selection is hash-seeded
+    cap_frac: float = 0.5     # clip: effective capacity multiplier
+    bit: int = 12             # corrupt: float32 bit to XOR-flip
+    shard: int = 0            # stall: which shard goes quiet
+
+    def matches(self, site: str) -> bool:
+        if site == "verify":
+            return self.site == "verify"
+        return self.site in ("", site)
+
+
+class FaultPlan(NamedTuple):
+    """A seeded, deterministic set of faults to inject."""
+    seed: int = 0
+    specs: Tuple[FaultSpec, ...] = ()
+
+    def validate(self) -> "FaultPlan":
+        for s in self.specs:
+            if s.kind not in FAULT_KINDS:
+                raise ValueError(
+                    f"unknown fault kind {s.kind!r}; one of {FAULT_KINDS}")
+            if not (0.0 <= s.fraction <= 1.0):
+                raise ValueError(f"fraction={s.fraction} not in [0, 1]")
+            if not (0.0 < s.cap_frac <= 1.0):
+                raise ValueError(f"cap_frac={s.cap_frac} not in (0, 1]")
+            if not (0 <= s.bit < 32):
+                raise ValueError(f"bit={s.bit} not a float32 bit")
+        return self
+
+
+_ACTIVE: Optional[FaultPlan] = None
+_CACHE_CLEARS: List[Callable[[], None]] = []
+
+
+def register_cache_clear(clear: Callable[[], None]) -> None:
+    """Register a compiled-program cache invalidator (typically the
+    ``cache_clear`` of an ``lru_cache``-wrapped shard_map builder).
+    ``inject`` calls every registered invalidator on entry and exit so
+    activating/deactivating a plan always forces a retrace."""
+    if clear not in _CACHE_CLEARS:
+        _CACHE_CLEARS.append(clear)
+
+
+def _clear_caches() -> None:
+    for clear in _CACHE_CLEARS:
+        clear()
+
+
+def active() -> Optional[FaultPlan]:
+    return _ACTIVE
+
+
+def specs_for(site: str) -> Tuple[FaultSpec, ...]:
+    """The active plan's specs matching ``site`` (empty when inactive —
+    the exchange primitives trace their pristine fault-free code)."""
+    if _ACTIVE is None:
+        return ()
+    return tuple(s for s in _ACTIVE.specs if s.matches(site))
+
+
+@contextlib.contextmanager
+def inject(plan: FaultPlan):
+    """Activate ``plan`` for the dynamic extent of the block.
+
+    Clears every registered compiled-program cache on entry (so the
+    faulted exchange code actually traces) and on exit (so subsequent
+    fault-free runs recompile pristine — bit-identity of the fault-free
+    path is a chaos acceptance criterion, not an accident).  Not
+    reentrant: nested injection would make attribution ambiguous.
+    """
+    global _ACTIVE
+    if _ACTIVE is not None:
+        raise RuntimeError("a FaultPlan is already active (not reentrant)")
+    plan.validate()
+    _clear_caches()
+    _ACTIVE = plan
+    try:
+        yield plan
+    finally:
+        _ACTIVE = None
+        _clear_caches()
+
+
+# --------------------------------------------------------------------------
+# trace-time application (called from comm/exchange.py)
+# --------------------------------------------------------------------------
+
+def _site_hash(site: str) -> int:
+    h = 0
+    for c in site:
+        h = (h * 131 + ord(c)) & 0x7FFFFFFF
+    return h
+
+
+def _select(seed: int, site: str, salt: int, shape,
+            fraction: float, names: Tuple[str, ...]) -> jax.Array:
+    """Deterministic per-item selection mask: a pure integer hash of
+    (seed, site, salt, flat index, shard index) — reproducible across
+    retraces, varying across shards."""
+    L = 1
+    for d in shape:
+        L *= int(d)
+    idx = jnp.arange(L, dtype=jnp.uint32).reshape(shape)
+    h = idx * jnp.uint32(2654435761)
+    h = h ^ jnp.uint32((seed * 1000003 + _site_hash(site)
+                        + salt * 9176) & 0xFFFFFFFF)
+    h = h ^ (lax.axis_index(names).astype(jnp.uint32)
+             * jnp.uint32(0x9E3779B9))
+    h = (h ^ (h >> 16)) * jnp.uint32(0x45D9F3B)
+    h = h ^ (h >> 16)
+    return (h % jnp.uint32(10_000)) < jnp.uint32(
+        min(10_000, int(round(fraction * 10_000))))
+
+
+def _flip_bit(x: jax.Array, sel: jax.Array, bit: int) -> jax.Array:
+    if x.dtype != jnp.float32:
+        return x
+    raw = lax.bitcast_convert_type(x, jnp.int32)
+    flipped = lax.bitcast_convert_type(raw ^ jnp.int32(1 << bit),
+                                       jnp.float32)
+    return jnp.where(sel, flipped, x)
+
+
+def apply_send(specs: Tuple[FaultSpec, ...], seed: int, site: str,
+               payload, dest: jax.Array, valid: jax.Array,
+               capacity: int, p: int, names: Tuple[str, ...]):
+    """Send-side faults for ``routed_exchange``.  Returns
+    (payload, dest, valid, cap_ok, injected): ``cap_ok`` is the
+    (possibly clipped) capacity the admission test must use — buffers
+    keep the static ``capacity`` shape — and ``injected`` the float32
+    per-shard count of affected items (psum'd by the caller via
+    ``ExchangeStats``)."""
+    inj = jnp.float32(0.0)
+    cap_ok = capacity
+    me = lax.axis_index(names).astype(jnp.int32)
+    for k, s in enumerate(specs):
+        if s.kind == "stall":
+            hit = valid & (me == jnp.int32(s.shard))
+            inj = inj + jnp.sum(hit.astype(jnp.float32))
+            valid = valid & ~hit
+        elif s.kind == "clip":
+            # affected items are exactly the forced overflow the caller
+            # books (it charges the clipped rows to ``injected`` too)
+            cap_ok = min(cap_ok, max(1, int(capacity * s.cap_frac)))
+        elif s.kind == "corrupt":
+            sel = _select(seed, site, k, dest.shape, s.fraction, names) \
+                & valid
+            inj = inj + jnp.sum(sel.astype(jnp.float32))
+            payload = jax.tree.map(
+                lambda x: _flip_bit(x, sel, s.bit)
+                if x.ndim == 1 else x, payload)
+        elif s.kind == "shuffle_dest":
+            sel = _select(seed, site, k, dest.shape, s.fraction, names) \
+                & valid
+            inj = inj + jnp.sum(sel.astype(jnp.float32))
+            dest = jnp.where(sel, (dest + 1) % jnp.int32(max(p, 1)), dest)
+    return payload, dest, valid, cap_ok, inj
+
+
+def apply_send_scatter(specs: Tuple[FaultSpec, ...], seed: int,
+                       site: str, payload, dest_mask: jax.Array,
+                       valid: jax.Array, capacity: int, p: int,
+                       names: Tuple[str, ...]):
+    """Send-side faults for ``scatter_updates`` (bitmask multicast)."""
+    inj = jnp.float32(0.0)
+    cap_ok = capacity
+    me = lax.axis_index(names).astype(jnp.int32)
+    full = jnp.int32((1 << p) - 1)
+    for k, s in enumerate(specs):
+        if s.kind == "stall":
+            hit = valid & (me == jnp.int32(s.shard))
+            inj = inj + jnp.sum(hit.astype(jnp.float32))
+            valid = valid & ~hit
+        elif s.kind == "clip":
+            cap_ok = min(cap_ok, max(1, int(capacity * s.cap_frac)))
+        elif s.kind == "corrupt":
+            sel = _select(seed, site, k, dest_mask.shape, s.fraction,
+                          names) & valid
+            inj = inj + jnp.sum(sel.astype(jnp.float32))
+            payload = jax.tree.map(
+                lambda x: _flip_bit(x, sel, s.bit)
+                if x.ndim == 1 else x, payload)
+        elif s.kind == "shuffle_dest":
+            sel = _select(seed, site, k, dest_mask.shape, s.fraction,
+                          names) & valid
+            inj = inj + jnp.sum(sel.astype(jnp.float32))
+            rot = ((dest_mask << 1) | ((dest_mask >> (p - 1)) & 1)) & full \
+                if p > 1 else dest_mask
+            dest_mask = jnp.where(sel, rot, dest_mask)
+    return payload, dest_mask, valid, cap_ok, inj
+
+
+def apply_recv(specs: Tuple[FaultSpec, ...], seed: int, site: str,
+               recv_ok: jax.Array, names: Tuple[str, ...]):
+    """Receive-side faults (``drop``): clear delivered slots from
+    ``recv_ok`` after the exchange — the sender's ``sent_ok`` and the
+    overflow counter are untouched, so the loss is silent at the
+    transport layer by design.  Returns (recv_ok, injected)."""
+    inj = jnp.float32(0.0)
+    for k, s in enumerate(specs):
+        if s.kind != "drop":
+            continue
+        sel = _select(seed, site, 101 + k, recv_ok.shape, s.fraction,
+                      names) & recv_ok
+        inj = inj + jnp.sum(sel.astype(jnp.float32))
+        recv_ok = recv_ok & ~sel
+    return recv_ok, inj

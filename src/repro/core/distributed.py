@@ -41,7 +41,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.core.graph import INVALID_W
+from repro.core.graph import INVALID_W, CapacityError
 
 # "no chosen edge" sentinel in eid space, shared by every engine (and
 # distributed_sharded.py) so the (w, eid) total orders can never diverge.
@@ -65,8 +65,10 @@ class CommStats(NamedTuple):
     ``hits``/``misses``/``pushed`` mirror the sharded engine's
     ghost-label-cache counters (``comm/exchange.py: ExchangeStats`` has
     the field-by-field units; ``misses`` doubles as the routed
-    endpoint-lookup item count when the cache is off).  They default to
-    0 so the replicated engine — which has no routed lookups — keeps
+    endpoint-lookup item count when the cache is off), and ``injected``
+    its fault-injection counter (``comm/faults.py``, ISSUE 7; always 0
+    outside an active ``FaultPlan``).  They default to 0 so the
+    replicated engine — which has no routed exchanges — keeps
     constructing the 4-field view unchanged.
     """
     calls: jax.Array   # [] int32 — collective invocations
@@ -76,6 +78,7 @@ class CommStats(NamedTuple):
     hits: jax.Array = np.float32(0.0)    # [] f32 — ghost-cache hits
     misses: jax.Array = np.float32(0.0)  # [] f32 — routed lookup items
     pushed: jax.Array = np.float32(0.0)  # [] f32 — dirty labels pushed
+    injected: jax.Array = np.float32(0.0)  # [] f32 — fault-injected items
 
 
 class DistGraph(NamedTuple):
@@ -119,9 +122,13 @@ def build_dist_graph(u: np.ndarray, v: np.ndarray, w: np.ndarray, n: int,
     if cap is None:
         cap = need
     elif cap < need:
-        raise ValueError(
+        # CapacityError subclasses ValueError, so pre-existing callers
+        # catching ValueError (and tests matching "cap") are unaffected
+        raise CapacityError(
             f"cap={cap} cannot hold ceil(2m/p)={need} edge slots per "
-            f"shard (m={m}, p={num_shards})")
+            f"shard (m={m}, p={num_shards}; "
+            f"{dm - cap * num_shards} directed copies would be silently "
+            "dropped)", dropped=dm - cap * num_shards)
     uu = np.zeros(num_shards * cap, np.int32)
     vv = np.zeros(num_shards * cap, np.int32)
     ww = np.full(num_shards * cap, INVALID_W, np.float32)

@@ -164,6 +164,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.comm import faults
 from repro.comm.exchange import (ExchangeStats, _hops, reply,
                                  routed_exchange, scatter_updates)
 from repro.core.distributed import (ESENT, CommStats, DistGraph,
@@ -219,7 +220,8 @@ def _sharded_lookup(table: jax.Array, vids: jax.Array, valid: jax.Array,
                     vps: int, capacity: int, axes: Tuple[str, ...],
                     schedule: str = "grid",
                     stats: Optional[ExchangeStats] = None,
-                    count_misses: bool = False):
+                    count_misses: bool = False,
+                    site: str = "lookup"):
     """Resolve ``table[vids[i]]`` where ``table`` is 1D-sharded by id.
 
     ``table`` is this shard's [vps] slice of a global [p * vps] int32
@@ -237,10 +239,10 @@ def _sharded_lookup(table: jax.Array, vids: jax.Array, valid: jax.Array,
     if stats is not None:
         return _lookup_request_reply(table, vids, valid, vps, capacity,
                                      names, schedule, stats,
-                                     count_misses=count_misses)
+                                     count_misses=count_misses, site=site)
     base = lax.axis_index(names) * vps
     ex = routed_exchange(vids, vids // vps, valid, capacity, names,
-                         schedule)
+                         schedule, site=site)
     off = jnp.clip(ex.recv - base, 0, vps - 1)
     answers = jnp.where(ex.recv_ok, table[off], jnp.int32(-1))
     out = reply(ex, answers, names, schedule)
@@ -251,7 +253,8 @@ def _lookup_request_reply(table: jax.Array, vids: jax.Array,
                           req: jax.Array, vps: int, capacity: int,
                           names: Tuple[str, ...], schedule: str,
                           stats: ExchangeStats,
-                          count_misses: bool = True):
+                          count_misses: bool = True,
+                          site: str = "lookup"):
     """One owner-routed label request/reply leg with the miss accounting
     booked once — the shared core of every lookup/fill variant (only the
     request-set construction and the answer fan-out differ per caller),
@@ -263,7 +266,7 @@ def _lookup_request_reply(table: jax.Array, vids: jax.Array,
     base = lax.axis_index(names) * vps
     items0 = stats.items
     ex = routed_exchange(vids, vids // vps, req, capacity, names,
-                         schedule, stats=stats)
+                         schedule, stats=stats, site=site)
     off = jnp.clip(ex.recv - base, 0, vps - 1)
     answers = jnp.where(ex.recv_ok, table[off], jnp.int32(-1))
     out, st = reply(ex, answers, names, schedule, stats=ex.stats)
@@ -352,7 +355,8 @@ def _ghost_fill(table: jax.Array, vids: jax.Array, runs,
                             ).at[run_id].max(valid)
     req = head & any_valid[run_id]
     out, ok, ovf, st = _lookup_request_reply(
-        table, vids, req, vps, capacity, names, schedule, stats)
+        table, vids, req, vps, capacity, names, schedule, stats,
+        site="fill")
     ghost = compat.vary(jnp.full((G,), -1, jnp.int32), names).at[
         jnp.where(ok, run_id, G)].set(out, mode="drop")
     return ghost, ovf, st
@@ -419,7 +423,7 @@ def _ghost_setup(u, v, valid, live, lab, vperm, n: int, vps: int,
     items0 = st.items
     ex = routed_exchange((cat, jnp.broadcast_to(mybit, cat.shape)),
                          cat // vps, req, cap_sub, names, schedule,
-                         stats=st)
+                         stats=st, site="subscribe")
     st = ex.stats
     # subscription maintenance rides the push counter so misses + pushed
     # stays the honest total ghost overhead
@@ -466,10 +470,11 @@ def _ghost_push(gstate, parent: jax.Array, vps: int, capacity: int,
     dirty = (parent != vid) & (root_subs != 0)
     items0 = stats.items
     upd = scatter_updates((vid, parent), root_subs, dirty, capacity,
-                          names, schedule, stats=stats)
+                          names, schedule, stats=stats, site="push")
     # subscriber sets follow the merge: bits of c move to owner(parent[c])
     fx = routed_exchange((parent, root_subs), parent // vps, dirty,
-                         capacity, names, schedule, stats=upd.stats)
+                         capacity, names, schedule, stats=upd.stats,
+                         site="push")
     st = fx.stats
     st = st._replace(pushed=st.pushed + (st.items - items0))
     root_subs = jnp.where(dirty, 0, root_subs)  # merged c: no longer a root
@@ -514,7 +519,7 @@ def _relabel_lookup(parent: jax.Array, has: jax.Array, lab: jax.Array,
     base = lax.axis_index(names) * vps
     req = ~settled
     ex = routed_exchange(lab, lab // vps, req, capacity, names, schedule,
-                         stats=stats)
+                         stats=stats, site="relabel")
     off = jnp.clip(ex.recv - base, 0, vps - 1)
     ans_lab = jnp.where(ex.recv_ok, parent[off], jnp.int32(-1))
     ans_cho = jnp.where(ex.recv_ok, has[off], False)
@@ -654,7 +659,8 @@ def _sharded_preprocess(u, v, w, eid, valid, n: int, vps: int,
     root_slot = groot[du]              # [cap] per-slot root of its source
     changed = head & valid & (root_slot != u)
     ex = routed_exchange((u, root_slot), u // vps, changed,
-                         min(capacity, cap), names, schedule, stats=stats)
+                         min(capacity, cap), names, schedule, stats=stats,
+                         site="prep")
     base = lax.axis_index(names) * vps
     vid = base + jnp.arange(vps, dtype=jnp.int32)
     rvid = ex.recv[0].reshape(-1)
@@ -706,9 +712,10 @@ def _sharded_minedges(ru, rv, wk, eid, alive, vps: int, capacity: int,
     names = tuple(axes)
     base = lax.axis_index(names) * vps
     ex_u = routed_exchange((ru, wk, eid, rv), ru // vps, alive, capacity,
-                           names, schedule, stats=stats)
+                           names, schedule, stats=stats, site="minedges")
     ex_v = routed_exchange((rv, wk, eid, ru), rv // vps, alive, capacity,
-                           names, schedule, stats=ex_u.stats)
+                           names, schedule, stats=ex_u.stats,
+                           site="minedges")
 
     def flat(ex):
         comp, w_, e_, o_ = ex.recv
@@ -792,7 +799,7 @@ def _sharded_minedges_src(ru, rv, wk, eid, alive, runs, vps: int,
     comp_c = crun[run_id]
     ex = routed_exchange((comp_c, wrun[run_id], erun[run_id],
                           orun[run_id]), comp_c // vps, send, capacity,
-                         names, schedule, stats=stats)
+                         names, schedule, stats=stats, site="minedges")
     comp, w_, e_, o_ = (x.reshape(-1) for x in ex.recv)
     okc = ex.recv_ok.reshape(-1)
     has, other, is_win, off = _owner_scatter_min(comp, w_, e_, o_, okc,
@@ -834,7 +841,8 @@ def _sharded_contract(has, other, n: int, vps: int, capacity: int,
     def hop(par, st):
         req = par != vid
         nxt, _, o, st = _sharded_lookup(par, par, req, vps, capacity,
-                                        names, schedule, stats=st)
+                                        names, schedule, stats=st,
+                                        site="contract")
         return jnp.where(req, nxt, par), o, st
 
     gp, ov0, stats = hop(parent0, stats)
@@ -975,7 +983,7 @@ def _round_body(u, v, w, eid, live0, lab, mst, dead, runs_u, runs_v,
     else:
         lab, _, o5, st = _sharded_lookup(
             parent, lab, compat.vary(jnp.ones((vps,), bool), names), vps,
-            cap_label, names, schedule, stats=st)
+            cap_label, names, schedule, stats=st, site="relabel")
     o6 = jnp.int32(0)
     if ghost:
         gstate, o6, st = _ghost_push(gstate, parent, vps, cap_push,
@@ -1119,7 +1127,8 @@ def _sharded_shard_fn(u, v, w, eid, n: int, vps: int,
     weight = lax.psum(jnp.sum(jnp.where(full_mask, w, 0.0)), names)
     count = lax.psum(jnp.sum(full_mask.astype(jnp.int32)), names)
     comm = CommStats(stats.calls, stats.items, stats.bytes, rounds,
-                     stats.hits, stats.misses, stats.pushed)
+                     stats.hits, stats.misses, stats.pushed,
+                     stats.injected)
     return full_mask, weight, count, lab, overflow, comm
 
 
@@ -1151,12 +1160,12 @@ def _build_sharded_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
 # shrinking-capacity driver: one jitted step per round, host-bounded caps
 # --------------------------------------------------------------------------
 
-_STAT_FIELDS = 7  # calls, items, bytes, slots, hits, misses, pushed
+_STAT_FIELDS = 8  # calls/items/bytes/slots, hits/misses/pushed, injected
 
 
 def _stat_leaves(st: ExchangeStats):
     return (st.calls, st.items, st.bytes, st.slots, st.hits, st.misses,
-            st.pushed)
+            st.pushed, st.injected)
 
 
 def _sharded_prep_shard_fn(u, v, w, eid, n: int, vps: int,
@@ -1729,6 +1738,7 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
                     "cache_hits": float(st[4]),
                     "lookup_items": float(st[5]),
                     "pushed_items": float(st[6]),
+                    "injected_items": float(st[7]),
                 })
             if not bool(go):
                 break
@@ -1739,7 +1749,7 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
     comm = CommStats(np.int32(acc[0]), np.float32(acc[1]),
                      np.float32(acc[2]), np.int32(rounds),
                      np.float32(acc[4]), np.float32(acc[5]),
-                     np.float32(acc[6]))
+                     np.float32(acc[6]), np.float32(acc[7]))
     return (jnp.asarray(mask), weight, count, lab, np.int32(overflow),
             comm)
 
@@ -1853,7 +1863,7 @@ def _planned_shard_fn(u, v, w, eid, n: int, vps: int,
     count = lax.psum(jnp.sum(full_mask.astype(jnp.int32)), names)
     comm = CommStats(stats.calls, stats.items, stats.bytes,
                      jnp.int32(plan.num_rounds), stats.hits,
-                     stats.misses, stats.pushed)
+                     stats.misses, stats.pushed, stats.injected)
     return full_mask, weight, count, lab, overflow, residual, comm
 
 
@@ -1894,11 +1904,40 @@ def _build_planned_batch_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
         out_specs=(spec, rep, rep, spec, rep, rep, rep)))
 
 
+# fault injection (comm/faults.py, ISSUE 7) must force a retrace when a
+# plan activates/deactivates: every memoized builder of a program that
+# routes through the exchanges registers its invalidator here
+for _b in (_build_sharded_fn, _build_sharded_prep_fn,
+           _build_ghost_setup_fn, _build_sharded_round_fn,
+           _build_planned_fn, _build_planned_batch_fn):
+    faults.register_cache_clear(_b.cache_clear)
+del _b
+
+
+def _replan_with_plan(graph: DistGraph, n: int, mesh: jax.sharding.Mesh,
+                      axes: Tuple[str, ...], plan: RoundPlan,
+                      round_trace: Optional[List[dict]] = None):
+    """One fresh measured pass with the plan's frozen levers — the
+    overflow/residual fallback shared by ``distributed_sharded_msf``'s
+    plan path, ``execute_plan_batched`` and the serving gateway's
+    strict-measured retry rung."""
+    return distributed_sharded_msf(
+        graph, n, mesh, algorithm=plan.algorithm, axis_names=axes,
+        num_levels=len(plan.level_bounds), schedule=plan.schedule,
+        local_preprocessing=plan.local_preprocessing,
+        coalesce=plan.coalesce, src_only=plan.src_only,
+        adaptive_doubling=plan.adaptive_doubling,
+        shrink_capacities=True, ghost_cache=plan.ghost is not None,
+        relabel_skip=plan.relabel_skip,
+        vsorted_index=plan.vsorted_index, round_trace=round_trace)
+
+
 def execute_plan_batched(graphs: Sequence[DistGraph], n: int,
                          mesh: jax.sharding.Mesh, plan: RoundPlan, *,
                          axis_names: Optional[Sequence[str]] = None,
-                         replan: bool = True,
-                         stack: bool = True):
+                         replan=True,
+                         stack: bool = True,
+                         verify: bool = False):
     """Replay one measured ``RoundPlan`` on B same-shape graphs at once.
 
     The batch is stacked to ``[B, p * cap]`` and served through the
@@ -1907,14 +1946,26 @@ def execute_plan_batched(graphs: Sequence[DistGraph], n: int,
     never-silent contract *independently per request*: requests the
     plan fits are returned from the batched run as-is; each request the
     plan does not fit is re-solved by its own fresh measured pass
-    (``replan=True``, the serving default) or the whole call raises
-    naming the offending batch indices (``replan=False``).
+    (``replan=True``, the serving default), the whole call raises
+    naming the offending batch indices (``replan=False``), or the bad
+    requests come back as ``None`` results for the caller to handle
+    (``replan="defer"`` — the gateway's retry ladder, ISSUE 7, which
+    must choose between retry, replan, and rejection itself).
 
-    Returns ``(results, replanned)``: ``results[i]`` is the engine's
+    ``verify=True`` (ISSUE 7) self-checks every returned forest
+    on-device at O(n/p) cost (``core/verify.py``: edge count = n −
+    components, label pointer-chase convergence, psum'd weight
+    checksum against the program's own reported scalars).  A forest
+    failing verification is treated exactly like an ill-fitting
+    request: replanned and re-verified strictly (``replan=True``),
+    deferred to ``None`` (``replan="defer"``), or the typed
+    ``VerifyFailure`` propagates (``replan=False``).
+
+    Returns ``(results, flagged)``: ``results[i]`` is the engine's
     standard 6-tuple ``(mask, weight, count, labels, overflow, stats)``
     for ``graphs[i]`` (overflow 0 for every request, replanned or not),
-    and ``replanned`` is the tuple of batch indices that fell back —
-    the serving gateway's drift signal.
+    and ``flagged`` is the tuple of batch indices that fell back or
+    deferred — the serving gateway's drift signal.
 
     ``stack=False`` asserts the caller already stacked the arrays
     (``graphs`` is then one ``DistGraph`` of ``[B, p * cap]`` arrays).
@@ -1949,6 +2000,7 @@ def execute_plan_batched(graphs: Sequence[DistGraph], n: int,
         batched.u, batched.v, batched.w, batched.eid)
     ovf_h = np.asarray(ovf)
     res_h = np.asarray(residual)
+    defer = replan == "defer"
     bad = tuple(int(i) for i in
                 np.nonzero((ovf_h != 0) | (res_h != 0))[0])
     if bad and not replan:
@@ -1960,23 +2012,44 @@ def execute_plan_batched(graphs: Sequence[DistGraph], n: int,
     results = []
     for i in range(batch_size):
         if i in bad:
-            # this request alone falls back to one fresh measured pass
-            # with the plan's frozen levers; batchmates keep their
-            # batched results untouched
-            results.append(distributed_sharded_msf(
-                graph_at(i), n, mesh, algorithm=plan.algorithm,
-                axis_names=axes, num_levels=len(plan.level_bounds),
-                schedule=plan.schedule,
-                local_preprocessing=plan.local_preprocessing,
-                coalesce=plan.coalesce, src_only=plan.src_only,
-                adaptive_doubling=plan.adaptive_doubling,
-                shrink_capacities=True,
-                ghost_cache=plan.ghost is not None,
-                relabel_skip=plan.relabel_skip,
-                vsorted_index=plan.vsorted_index))
+            if defer:
+                results.append(None)
+            else:
+                # this request alone falls back to one fresh measured
+                # pass with the plan's frozen levers; batchmates keep
+                # their batched results untouched
+                results.append(_replan_with_plan(graph_at(i), n, mesh,
+                                                 axes, plan))
         else:
             results.append((mask[i], weight[i], count[i], lab[i],
                             ovf[i], CommStats(*(f[i] for f in comm))))
+    if verify:
+        from repro.core.verify import VerifyFailure, verify_forest
+        for i, res in enumerate(results):
+            if res is None:
+                continue
+            try:
+                verify_forest(graph_at(i), n, mesh, res[0], res[3],
+                              axis_names=axes,
+                              expected_weight=float(res[1]),
+                              expected_count=int(res[2]))
+            except VerifyFailure:
+                if defer:
+                    results[i] = None
+                    if i not in bad:
+                        bad = bad + (i,)
+                elif replan and i not in bad:
+                    # one strict rung: replan, re-verify, then propagate
+                    g = graph_at(i)
+                    r2 = _replan_with_plan(g, n, mesh, axes, plan)
+                    verify_forest(g, n, mesh, r2[0], r2[3],
+                                  axis_names=axes,
+                                  expected_weight=float(r2[1]),
+                                  expected_count=int(r2[2]))
+                    results[i] = r2
+                    bad = bad + (i,)
+                else:
+                    raise
     return results, bad
 
 
@@ -2073,7 +2146,8 @@ def execute_plan(graph: DistGraph, n: int, mesh: jax.sharding.Mesh,
                  plan: RoundPlan, *,
                  axis_names: Optional[Sequence[str]] = None,
                  replan: bool = True,
-                 round_trace: Optional[List[dict]] = None):
+                 round_trace: Optional[List[dict]] = None,
+                 verify: bool = False):
     """Replay a measured ``RoundPlan`` on a same-shape graph.
 
     Alias for ``distributed_sharded_msf(graph, n, mesh, plan=plan)``:
@@ -2089,10 +2163,24 @@ def execute_plan(graph: DistGraph, n: int, mesh: jax.sharding.Mesh,
     list empty — per-round numbers for a plan come from the plan
     itself (``launch/roofline.py: plan_summary``) or from the
     measurement pass (``plan_sharded_msf(round_trace=...)``).
+
+    ``verify=True`` (ISSUE 7) self-checks the returned forest on-device
+    (``core/verify.py``) against the structural MSF invariants and the
+    program's own reported scalars, raising a typed ``VerifyFailure``
+    instead of returning a silently wrong forest.  Concrete inputs
+    only — under tracing the check is skipped (the AOT contract folds
+    every hazard into ``overflow`` instead).
     """
-    return distributed_sharded_msf(graph, n, mesh, plan=plan,
-                                   axis_names=axis_names, replan=replan,
-                                   round_trace=round_trace)
+    out = distributed_sharded_msf(graph, n, mesh, plan=plan,
+                                  axis_names=axis_names, replan=replan,
+                                  round_trace=round_trace)
+    if verify and not isinstance(graph.u, jax.core.Tracer):
+        from repro.core.verify import verify_forest
+        verify_forest(graph, n, mesh, out[0], out[3],
+                      axis_names=axis_names,
+                      expected_weight=float(out[1]),
+                      expected_count=int(out[2]))
+    return out
 
 
 def vertices_per_shard(n: int, num_shards: int) -> int:
@@ -2286,15 +2374,8 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
                 "replan=True")
         # overflow -> replan fallback: one fresh measured pass with the
         # plan's frozen levers — never a silently unreliable result
-        return distributed_sharded_msf(
-            graph, n, mesh, algorithm=plan.algorithm, axis_names=axes,
-            num_levels=len(plan.level_bounds), schedule=plan.schedule,
-            local_preprocessing=plan.local_preprocessing,
-            coalesce=plan.coalesce, src_only=plan.src_only,
-            adaptive_doubling=plan.adaptive_doubling,
-            shrink_capacities=True, ghost_cache=plan.ghost is not None,
-            relabel_skip=plan.relabel_skip,
-            vsorted_index=plan.vsorted_index, round_trace=round_trace)
+        return _replan_with_plan(graph, n, mesh, axes, plan,
+                                 round_trace=round_trace)
     limit = MAX_GHOST_SHARDS if ghost_shard_limit is None \
         else int(ghost_shard_limit)
     if p > limit:

@@ -22,6 +22,22 @@ import numpy as np
 INVALID_W = np.float32(np.inf)
 
 
+class CapacityError(ValueError):
+    """A fixed-capacity edge layout cannot hold the given edges.
+
+    Raised loudly (ISSUE 7) wherever a ``cap``/``pad_to`` argument used
+    to be silently trusted: dropping edges past capacity would produce a
+    *wrong MSF with no signal*, the exact failure mode the exchange
+    layer's overflow accounting exists to prevent.  ``dropped`` is the
+    number of edges the requested capacity cannot hold; the serving
+    gateway maps this to a typed admission rejection.
+    """
+
+    def __init__(self, message: str, dropped: int = 0):
+        super().__init__(message)
+        self.dropped = int(dropped)
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class EdgeList:
@@ -56,10 +72,18 @@ class EdgeList:
 
 def from_numpy(u: np.ndarray, v: np.ndarray, w: np.ndarray, n: int,
                pad_to: int | None = None) -> EdgeList:
-    """Build a (optionally padded) EdgeList from host arrays."""
+    """Build a (optionally padded) EdgeList from host arrays.
+
+    ``pad_to`` must hold every edge — a short capacity raises a
+    ``CapacityError`` with the dropped count instead of silently
+    truncating (ISSUE 7: lost edges are a wrong MSF with no signal).
+    """
     m = len(u)
     cap = m if pad_to is None else int(pad_to)
-    assert cap >= m, (cap, m)
+    if cap < m:
+        raise CapacityError(
+            f"pad_to={cap} cannot hold {m} edges ({m - cap} would be "
+            "silently dropped)", dropped=m - cap)
     uu = np.zeros(cap, np.int32)
     vv = np.zeros(cap, np.int32)
     ww = np.full(cap, INVALID_W, np.float32)
@@ -103,14 +127,26 @@ def to_directed_sorted(u: np.ndarray, v: np.ndarray, w: np.ndarray
 
 
 def partition_edges(u: np.ndarray, v: np.ndarray, w: np.ndarray, n: int,
-                    num_shards: int) -> EdgeList:
+                    num_shards: int, cap: int | None = None) -> EdgeList:
     """1D-partition a sorted directed edge list into equal padded shards.
 
     Returns an EdgeList whose arrays have shape [num_shards * cap] laid out
     shard-major, ready to feed a shard_map over a 1D mesh axis.
+
+    ``cap`` optionally pins the per-shard slot count (capacity-ladder
+    callers); it must hold ``ceil(m / num_shards)`` — a short pin raises
+    ``CapacityError`` with the dropped count instead of truncating.
     """
     m = len(u)
-    cap = -(-m // num_shards)  # ceil
+    need = -(-m // num_shards)  # ceil
+    if cap is None:
+        cap = need
+    elif cap < need:
+        raise CapacityError(
+            f"cap={cap} cannot hold ceil(m/p)={need} edge slots per "
+            f"shard (m={m}, p={num_shards}; "
+            f"{m - cap * num_shards} edges would be silently dropped)",
+            dropped=m - cap * num_shards)
     uu = np.zeros(num_shards * cap, np.int32)
     vv = np.zeros(num_shards * cap, np.int32)
     ww = np.full(num_shards * cap, INVALID_W, np.float32)

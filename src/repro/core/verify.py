@@ -1,0 +1,185 @@
+"""On-device self-verification of a served MSF (ISSUE 7).
+
+The engines' exactness argument rests on "overflow never silent" — but a
+fault *past* the transport layer (a corrupted in-flight candidate, a
+dropped receive slot, a stalled shard) can produce a structurally
+plausible forest with overflow 0.  This module checks the returned
+(mask, labels) pair against the algebraic invariants any correct MSF
+run must satisfy, at O(n/p) cost per shard:
+
+  * **pointer-chase convergence** — the label vector is a fixpoint:
+    ``lab[lab[x]] == lab[x]`` for every real vertex (one owner-routed
+    request/reply at capacity ``vps``, which cannot overflow: a shard
+    sends at most ``vps`` requests total);
+  * **range** — every real vertex's label is a real vertex id;
+  * **forest size** — ``count == n - components`` with components
+    counted as label fixpoints (``lab[x] == x``): a forest on ``n``
+    vertices with ``c`` trees has exactly ``n - c`` edges, so a mask
+    that lost or gained edges relative to the label partition is caught
+    even when each edge looks locally fine;
+  * **edge sanity** — no masked slot is a padding slot (non-finite
+    weight) or a self-loop;
+  * **weight checksum** — the psum'd recomputed ``sum(w[mask])``
+    must match the caller-supplied expectation (the program's own
+    reported scalar in ``execute_plan(verify=True)``; the Kruskal
+    oracle's total in the chaos harness) — the check that catches a
+    *wrong-but-well-formed* forest, e.g. a stalled MINEDGES shard
+    yielding a valid smaller forest of the surviving candidates.
+
+The verifier's own exchange is labelled ``site="verify"``, which the
+fault-injection harness (``comm/faults.py``) deliberately excludes from
+blanket ``site=""`` plans — a verifier that can be silently faulted
+could never classify a chaos outcome.  Failures surface as the typed
+``VerifyFailure`` carrying the full ``VerifyReport``; serving code
+(``serve/msf_gateway.py``) maps it to its retry/breaker ladder instead
+of returning a silently wrong MSF.
+"""
+from __future__ import annotations
+
+import functools
+from functools import partial
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.comm import faults
+from repro.comm.exchange import reply, routed_exchange
+from repro.core.distributed import DistGraph
+
+
+class VerifyReport(NamedTuple):
+    """Host-side verdict of one ``verify_forest`` pass.  ``reasons`` is
+    empty iff ``ok``; every failed invariant contributes one line."""
+    ok: bool
+    reasons: Tuple[str, ...]
+    count: int            # masked edges
+    components: int       # label fixpoints among real vertices
+    weight: float         # recomputed psum'd sum(w[mask])
+    converged_bad: int    # real vertices with lab[lab[x]] != lab[x]
+    range_bad: int        # real vertices with lab[x] outside [0, n)
+    edge_bad: int         # masked slots that are padding or self-loops
+    overflow: int         # verify-exchange overflow (0 by construction)
+
+
+class VerifyFailure(RuntimeError):
+    """A served forest failed self-verification.  ``report`` carries the
+    full invariant-by-invariant breakdown."""
+
+    def __init__(self, report: VerifyReport):
+        self.report = report
+        super().__init__(
+            "forest failed verification: " + "; ".join(report.reasons))
+
+
+def _verify_shard_fn(u, v, w, mask, lab, n: int, vps: int,
+                     axes: Tuple[str, ...], schedule: str):
+    names = tuple(axes)
+    base = lax.axis_index(names) * vps
+    vid = base + jnp.arange(vps, dtype=jnp.int32)
+    real = vid < n
+    # range first: out-of-range labels are counted, then clipped so the
+    # fixpoint request still routes to a real owner
+    range_bad = lax.psum(jnp.sum((real & ((lab < 0) | (lab >= n))
+                                  ).astype(jnp.int32)), names)
+    labq = jnp.clip(lab, 0, n - 1)
+    ex = routed_exchange(labq, labq // vps, real, vps, names, schedule,
+                         site="verify")
+    off = jnp.clip(ex.recv - base, 0, vps - 1)
+    answers = jnp.where(ex.recv_ok, lab[off], jnp.int32(-1))
+    lab2 = reply(ex, answers, names, schedule)
+    ok_req = real & ex.sent_ok
+    converged_bad = lax.psum(
+        jnp.sum((ok_req & (lab2 != labq)).astype(jnp.int32))
+        + jnp.sum((real & ~ex.sent_ok).astype(jnp.int32)), names)
+    components = lax.psum(jnp.sum((real & (lab == vid)
+                                   ).astype(jnp.int32)), names)
+    count = lax.psum(jnp.sum(mask.astype(jnp.int32)), names)
+    edge_bad = lax.psum(jnp.sum((mask & (~jnp.isfinite(w) | (u == v))
+                                 ).astype(jnp.int32)), names)
+    weight = lax.psum(jnp.sum(jnp.where(mask, w, 0.0)), names)
+    return (converged_bad, range_bad, edge_bad, components, count,
+            weight, ex.overflow)
+
+
+@functools.lru_cache(maxsize=32)
+def _build_verify_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
+                     axes: Tuple[str, ...], schedule: str):
+    fn = partial(_verify_shard_fn, n=n, vps=vps, axes=axes,
+                 schedule=schedule)
+    spec = P(axes)
+    return jax.jit(compat.shard_map(
+        fn, mesh=mesh, in_specs=(spec,) * 5, out_specs=(P(),) * 7))
+
+
+# a FaultSpec may target site="verify" explicitly (harness self-tests);
+# the compiled verifier must retrace across inject boundaries like
+# every other routed program
+faults.register_cache_clear(_build_verify_fn.cache_clear)
+
+
+def verify_forest(graph: DistGraph, n: int, mesh: jax.sharding.Mesh,
+                  mask: jax.Array, lab: jax.Array, *,
+                  axis_names: Optional[Sequence[str]] = None,
+                  expected_weight: Optional[float] = None,
+                  expected_count: Optional[int] = None,
+                  rel_tol: float = 1e-5,
+                  raise_on_fail: bool = True) -> VerifyReport:
+    """Check ``(mask, lab)`` as an MSF of ``graph`` on-device.
+
+    ``mask`` is the engine's per-slot MSF mask ([p * cap], one directed
+    copy per edge), ``lab`` the sharded label vector ([p * vps]).  The
+    structural invariants (convergence, range, forest size, edge
+    sanity) always run; the weight / count cross-checks run when the
+    caller supplies expectations — the executing program's own reported
+    scalars in ``execute_plan(verify=True)`` (internal consistency), or
+    an external oracle's in the chaos harness (ground truth).
+    ``rel_tol`` tolerates reduction-order noise in the float32 weight
+    psum; wrong-edge deltas are orders of magnitude larger.
+
+    Returns the ``VerifyReport``; with ``raise_on_fail`` (default) a
+    failing report raises the typed ``VerifyFailure`` instead.
+    """
+    axes = tuple(axis_names or mesh.axis_names)
+    p = 1
+    for a in axes:
+        p *= mesh.shape[a]
+    vps = max(1, -(-n // p))
+    fn = _build_verify_fn(n, vps, mesh, axes, "grid")
+    (converged_bad, range_bad, edge_bad, components, count, weight,
+     overflow) = (int(x) if i < 5 or i == 6 else float(x)
+                  for i, x in enumerate(fn(graph.u, graph.v, graph.w,
+                                           mask, lab)))
+    reasons = []
+    if overflow:
+        reasons.append(f"verify exchange overflowed ({overflow} items)")
+    if range_bad:
+        reasons.append(f"{range_bad} labels outside [0, {n})")
+    if converged_bad:
+        reasons.append(f"{converged_bad} labels not a fixpoint "
+                       "(lab[lab[x]] != lab[x])")
+    if edge_bad:
+        reasons.append(f"{edge_bad} masked slots are padding or "
+                       "self-loops")
+    if count != n - components:
+        reasons.append(f"edge count {count} != n - components = "
+                       f"{n} - {components} = {n - components}")
+    if expected_count is not None and count != int(expected_count):
+        reasons.append(f"edge count {count} != expected "
+                       f"{int(expected_count)}")
+    if expected_weight is not None:
+        exp = float(expected_weight)
+        if abs(weight - exp) > rel_tol * max(1.0, abs(exp)):
+            reasons.append(f"weight checksum {weight!r} != expected "
+                           f"{exp!r} (rel_tol={rel_tol})")
+    report = VerifyReport(ok=not reasons, reasons=tuple(reasons),
+                          count=count, components=components,
+                          weight=weight, converged_bad=converged_bad,
+                          range_bad=range_bad, edge_bad=edge_bad,
+                          overflow=overflow)
+    if reasons and raise_on_fail:
+        raise VerifyFailure(report)
+    return report

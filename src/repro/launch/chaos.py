@@ -1,0 +1,293 @@
+import os
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                               + os.environ.get("XLA_FLAGS", ""))
+
+"""Chaos driver (ISSUE 7): the fault matrix, end to end.
+
+    PYTHONPATH=src python -m repro.launch.chaos --smoke
+    PYTHONPATH=src python -m repro.launch.chaos          # full, writes BENCH
+
+Runs every fault class of ``comm/faults.py`` against the sharded engine
+across the graph-family × execution-path grid and asserts the serving
+stack's one robustness invariant: **an injected fault is either
+detected or tolerated, never silent.**
+
+  * *detected* — the run raised a typed error (overflow under strict
+    replay, ``VerifyFailure``, ``CapacityError``), or the returned
+    forest failed the fault-free on-device verifier armed with the
+    Kruskal oracle's ground-truth weight and edge count;
+  * *tolerated* — the final MSF is bit-identical to the fault-free
+    baseline (the redundancy of the directed edge layout or the
+    round structure absorbed the fault);
+  * *SILENT* — anything else: a result that differs from the truth and
+    passed verification.  One silent cell fails the driver (exit 1).
+
+Fault → site pairings are chosen to hit each transport fault where it
+hurts: capacity clipping and shard stalls at MINEDGES (the round's main
+exchange), payload corruption on the in-flight candidate weights,
+destination shuffles on the pointer-chase hops, receive-slot drops on
+the ghost push.  Each cell replays a fault-free measured plan under
+``faults.inject`` with ``replan=False`` — strict mode, so a misfit is a
+raise, never a quiet fallback that would mask the fault.
+
+After the matrix the driver re-runs every cell's graph fault-free and
+asserts bit-identity against the pre-matrix baselines — injection must
+not perturb the fault-free path (the hooks compile away when no plan is
+active).  It also measures the warm-path overhead of
+``execute_plan(verify=True)`` (the O(n/p) self-check the gateway can
+switch on); full mode merges a ``chaos`` section with the matrix and
+the overhead numbers into ``BENCH_sharded_comm.json``.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+from typing import List, Optional, Tuple  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+from repro.comm import faults  # noqa: E402
+from repro.core import oracle  # noqa: E402
+from repro.core.distributed import build_dist_graph  # noqa: E402
+from repro.core.distributed_sharded import (execute_plan,  # noqa: E402
+                                            execute_plan_batched,
+                                            plan_sharded_msf)
+from repro.core.graph import CapacityError  # noqa: E402
+from repro.core.verify import verify_forest  # noqa: E402
+from repro.data import generators  # noqa: E402
+
+# fault class -> FaultSpec aimed at the exchange site where it bites.
+# corrupt flips an exponent bit (26) on a fraction of in-flight
+# candidate weights: a sign-sized perturbation, so a swayed argmin
+# picks an edge whose true weight differs from the oracle's by far
+# more than the verifier's float tolerance — never an in-tolerance swap.
+FAULT_MATRIX: Tuple[Tuple[str, faults.FaultSpec], ...] = (
+    ("clip", faults.FaultSpec(kind="clip", site="minedges",
+                              cap_frac=0.25)),
+    ("corrupt", faults.FaultSpec(kind="corrupt", site="minedges",
+                                 fraction=0.25, bit=26)),
+    ("shuffle_dest", faults.FaultSpec(kind="shuffle_dest",
+                                      site="contract", fraction=1.0)),
+    ("drop", faults.FaultSpec(kind="drop", site="push", fraction=0.5)),
+    ("stall", faults.FaultSpec(kind="stall", site="minedges", shard=0)),
+)
+
+
+def _build(family: str, n: int, p: int, seed: int,
+           cap: Optional[int] = None):
+    """One generated graph as (DistGraph, oracle mask/weight/count)."""
+    u, v, w, n = generators.generate(family, n, avg_degree=8.0, seed=seed)
+    if cap is None:
+        cap = max(1, -(-2 * len(u) // p))
+    g = build_dist_graph(u, v, w, n, p, cap=cap)[0]
+    km, kw = oracle.kruskal(u, v, w, n)
+    return g, km, kw, int(km.sum()), cap, len(u)
+
+
+def _oracle_identical(g, mask, km) -> bool:
+    eid = np.asarray(g.eid)
+    return np.array_equal(np.unique(eid[np.asarray(mask)]),
+                          np.flatnonzero(km))
+
+
+def _classify(g, n, mesh, plan, spec, seed, base_mask, kw, kc):
+    """Run one planned replay under injection and classify the outcome."""
+    fp = faults.FaultPlan(seed=seed, specs=(spec,))
+    injected = -1.0
+    try:
+        with faults.inject(fp):
+            out = execute_plan(g, n, mesh, plan, replan=False)
+            injected = float(out[5].injected)
+    except (RuntimeError, CapacityError) as e:
+        return "detected", f"raised {type(e).__name__}: {e}", injected
+    mask = np.asarray(out[0])
+    if np.array_equal(mask, base_mask):
+        return "tolerated", "bit-identical MSF", injected
+    rep = verify_forest(g, n, mesh, out[0], out[3], expected_weight=kw,
+                        expected_count=kc, raise_on_fail=False)
+    if not rep.ok:
+        return "detected", "verify: " + "; ".join(rep.reasons), injected
+    return "SILENT", "result differs from oracle yet verified", injected
+
+
+def _classify_batched(graphs, n, mesh, plan, spec, seed, truths):
+    """Same classification through the vmapped batched path."""
+    fp = faults.FaultPlan(seed=seed, specs=(spec,))
+    try:
+        with faults.inject(fp):
+            results, _ = execute_plan_batched(graphs, n, mesh, plan,
+                                              replan=False)
+    except (RuntimeError, CapacityError) as e:
+        return "detected", f"raised {type(e).__name__}: {e}"
+    verdicts = []
+    for g, res, (base_mask, kw, kc) in zip(graphs, results, truths):
+        mask = np.asarray(res[0])
+        if np.array_equal(mask, base_mask):
+            verdicts.append("tolerated")
+            continue
+        rep = verify_forest(g, n, mesh, res[0], res[3],
+                            expected_weight=kw, expected_count=kc,
+                            raise_on_fail=False)
+        verdicts.append("detected" if not rep.ok else "SILENT")
+    if "SILENT" in verdicts:
+        return "SILENT", f"per-graph verdicts: {verdicts}"
+    if "detected" in verdicts:
+        return "detected", f"per-graph verdicts: {verdicts}"
+    return "tolerated", "all graphs bit-identical"
+
+
+def run_matrix(families, n: int, seed: int, batched: bool,
+               verbose: bool = True) -> List[dict]:
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    p = mesh.devices.size
+    cells: List[dict] = []
+    baselines = []  # (graph, plan, base_mask, family) for the re-check
+    for family in families:
+        g, km, kw, kc, cap, m = _build(family, n, p, seed)
+        plan = plan_sharded_msf(g, n, mesh)
+        out0 = execute_plan(g, n, mesh, plan, replan=False)
+        base_mask = np.asarray(out0[0])
+        assert _oracle_identical(g, base_mask, km), \
+            f"{family}: fault-free baseline != Kruskal oracle"
+        baselines.append((g, plan, base_mask, family))
+        for fault, spec in FAULT_MATRIX:
+            verdict, why, injected = _classify(
+                g, n, mesh, plan, spec, seed, base_mask, kw, kc)
+            cells.append({"fault": fault, "family": family,
+                          "path": "planned", "verdict": verdict,
+                          "why": why, "injected_items": injected})
+            if verbose:
+                print(f"  {fault:<12} {family:<6} planned  -> {verdict}"
+                      f"  ({why[:90]})")
+        if batched:
+            # two same-shape graphs through one vmapped dispatch; the
+            # shared capacity is the max of the two exact needs
+            e1 = generators.generate(family, n, avg_degree=8.0,
+                                     seed=seed)
+            e2 = generators.generate(family, n, avg_degree=8.0,
+                                     seed=seed + 1)
+            bcap = max(max(1, -(-2 * len(e[0]) // p)) for e in (e1, e2))
+            pair, truths = [], []
+            for u, v, w, _n in (e1, e2):
+                pair.append(build_dist_graph(u, v, w, n, p,
+                                             cap=bcap)[0])
+                km_i, kw_i = oracle.kruskal(u, v, w, n)
+                truths.append((km_i, kw_i, int(km_i.sum())))
+            # the classification cells replay with replan=False, so the
+            # plan must strictly fit BOTH graphs fault-free: measure on
+            # the first, pad generously, and if the second still needs
+            # residual rounds fall back to batching the first twice
+            bplan = plan_sharded_msf(pair[0], n, mesh).pad(0.5)
+            try:
+                bres, _ = execute_plan_batched(pair, n, mesh, bplan,
+                                               replan=False)
+            except RuntimeError:
+                pair[1] = pair[0]
+                truths[1] = truths[0]
+                bres, _ = execute_plan_batched(pair, n, mesh, bplan,
+                                               replan=False)
+            for g_i, res, (km_i, kw_i, kc_i) in zip(pair, bres, truths):
+                assert _oracle_identical(g_i, np.asarray(res[0]), km_i), \
+                    f"{family}: batched baseline != oracle"
+            # baseline masks + oracle scalars for per-graph verdicts
+            truths = [(np.asarray(r[0]), t[1], t[2])
+                      for r, t in zip(bres, truths)]
+            gg, g2 = pair
+            for fault, spec in FAULT_MATRIX:
+                verdict, why = _classify_batched(
+                    [gg, g2], n, mesh, bplan, spec, seed, truths)
+                cells.append({"fault": fault, "family": family,
+                              "path": "batched", "verdict": verdict,
+                              "why": why})
+                if verbose:
+                    print(f"  {fault:<12} {family:<6} batched  -> "
+                          f"{verdict}  ({why[:90]})")
+    # fault-free path must be unperturbed by everything above: with no
+    # active FaultPlan the hooks are dead code and every cache was
+    # cleared on the last inject() exit, so this retraces from scratch
+    for g, plan, base_mask, family in baselines:
+        out = execute_plan(g, n, mesh, plan, replan=False)
+        assert np.array_equal(np.asarray(out[0]), base_mask), \
+            f"{family}: fault-free path perturbed after the fault matrix"
+    if verbose:
+        print(f"  fault-free re-run: {len(baselines)} baselines "
+              "bit-identical")
+    return cells
+
+
+def measure_verify_overhead(n: int, seed: int, iters: int = 5) -> dict:
+    """Warm-path cost of execute_plan(verify=True) vs verify=False."""
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    p = mesh.devices.size
+    g, km, kw, kc, _, _ = _build("gnm", n, p, seed)
+    plan = plan_sharded_msf(g, n, mesh)
+    for v in (False, True):  # warm both paths (compile + verifier build)
+        execute_plan(g, n, mesh, plan, replan=False, verify=v)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        execute_plan(g, n, mesh, plan, replan=False)
+    t_plain = (time.perf_counter() - t0) / iters
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        execute_plan(g, n, mesh, plan, replan=False, verify=True)
+    t_verify = (time.perf_counter() - t0) / iters
+    return {"n": n, "iters": iters,
+            "t_plain_ms": round(t_plain * 1e3, 3),
+            "t_verify_ms": round(t_verify * 1e3, 3),
+            "verify_overhead_x": round(t_verify / max(t_plain, 1e-9), 3)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small matrix (planned path only), no BENCH "
+                    "write; asserts zero silent corruptions")
+    ap.add_argument("--n", type=int, default=0,
+                    help="vertices per graph (default 128 smoke / "
+                    "512 full)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    n = args.n or (128 if args.smoke else 512)
+
+    print(f"chaos: {len(FAULT_MATRIX)} fault classes x gnm/rgg2d x "
+          f"{'planned' if args.smoke else 'planned+batched'}, n={n}, "
+          f"p={jax.device_count()}")
+    cells = run_matrix(("gnm", "rgg2d"), n, args.seed,
+                       batched=not args.smoke)
+    silent = [c for c in cells if c["verdict"] == "SILENT"]
+    counts = {v: sum(1 for c in cells if c["verdict"] == v)
+              for v in ("detected", "tolerated", "SILENT")}
+    print(f"chaos matrix: {len(cells)} cells -> {counts}")
+    if silent:
+        for c in silent:
+            print(f"SILENT: {c}")
+        raise SystemExit(1)
+
+    overhead = measure_verify_overhead(n, args.seed)
+    print(f"verify=True overhead: {overhead['verify_overhead_x']}x "
+          f"({overhead['t_plain_ms']}ms -> {overhead['t_verify_ms']}ms "
+          f"warm, n={overhead['n']})")
+
+    if not args.smoke:
+        path = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                            "..", "..", "..",
+                                            "BENCH_sharded_comm.json"))
+        bench = {}
+        if os.path.exists(path):
+            with open(path) as f:
+                bench = json.load(f)
+        bench["chaos"] = {"n": n, "seed": args.seed, "cells": cells,
+                          "verdict_counts": counts,
+                          "verify_overhead": overhead}
+        with open(path, "w") as f:
+            json.dump(bench, f, indent=2, sort_keys=True)
+        print(f"wrote chaos section -> {path}")
+    print("chaos: OK (zero silent corruptions)")
+
+
+if __name__ == "__main__":
+    main()

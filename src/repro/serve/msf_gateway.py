@@ -1,4 +1,5 @@
-"""MSF serving gateway (ISSUE 6): plan-LRU + continuous batching.
+"""MSF serving gateway (ISSUE 6): plan-LRU + continuous batching,
+hardened against adversarial traffic and faulty execution (ISSUE 7).
 
 The "compile once, serve heavy traffic" loop the RoundPlan machinery
 (ISSUE 5) was built for.  A stream of graph requests is admitted into a
@@ -11,50 +12,127 @@ cost one dispatch.
 Request lifecycle::
 
     submit(req)
-      └─ cache key = plan_cache_key(family, n, p, cap rung, algorithm,
-         levers)   — the per-shard edge capacity is padded UP to the
-         next power-of-two rung, so same-family graphs of slightly
+      ├─ ``validate_graph`` admission control: NaN/±inf weights,
+      │  out-of-range vertex ids, mismatched arrays and over-cap edge
+      │  lists are rejected with a typed ``AdmissionError`` *here* —
+      │  a non-finite weight would silently alias the engine's padding
+      │  sentinel, the exact wrong-MSF-with-no-signal failure the
+      │  exchange layer's overflow contract exists to prevent
+      └─ cache key = plan_cache_key(family, n, p, cap rung, algorithm)
+         — the per-shard edge capacity is padded UP to the next
+         power-of-two rung, so same-family graphs of slightly
          different edge counts land on one array shape → one plan →
          one compiled program
     step()
-      ├─ admit up to ``batch_slots`` queued requests sharing the
-      │  queue head's key (continuous batching; other keys keep their
-      │  queue order)
-      ├─ plan-LRU lookup
-      │    hit  → reuse the cached padded plan
-      │    miss → measure once on the first request's graph
-      │           (``plan_sharded_msf``), ``pad(pad_margin)``, insert;
-      │           evict the least-recently-used entry beyond
-      │           ``cache_size``
-      ├─ batched planned execution; per-request overflow / residual is
-      │  surfaced independently, so an ill-fitting request replans
-      │  alone (one fresh measured pass) without poisoning batchmates
+      ├─ deadline sweep: a request whose ``deadline`` (seconds from
+      │  submit) already passed is rejected, not served late
+      ├─ admit up to ``batch_slots`` queued *ready* requests sharing
+      │  the queue head's key (continuous batching; backoff-deferred
+      │  requests and other keys keep their queue order)
+      ├─ plan-LRU lookup (hit → reuse; miss → measure + pad + insert,
+      │  LRU-evict past ``cache_size``)
+      ├─ batched planned execution with ``replan="defer"`` (and
+      │  optionally ``verify=True``): per-request overflow / residual /
+      │  verification failure comes back as a per-index flag instead of
+      │  an in-library fallback, so the gateway owns the retry ladder:
+      │    retry budget left → one strict measured replan, re-verified
+      │      — success serves the request (``served_via="replanned"``)
+      │    replan itself fails verification → requeue with exponential
+      │      backoff (``backoff_base * 2**retries``)
+      │    budget exhausted → typed rejection (never an infinite loop:
+      │      every flagged request either serves or rejects within
+      │      ``max_retries_per_request`` retries)
+      ├─ circuit breaker: ``breaker_threshold`` *consecutive* steps
+      │  with a still-failing request trip the entry — it is dropped
+      │  from the LRU (a fresh measurement will replace it) and the
+      │  poisoning requests are rejected immediately, so one hostile
+      │  request can never replan-storm ``run()``
       └─ drift: each entry tracks its replan rate; past
          ``replan_threshold`` (with ``min_samples`` observations) the
          entry is re-measured from a drifted graph and refreshed with
          ``pad(pad_margin)`` headroom
 
-Every result carries the engine's exactness contract: overflow 0
+Every served result carries the engine's exactness contract: overflow 0
 (batched fit or replanned), reducible to the undirected input edge set
-via ``eid``.  The slot-pool substrate this models itself on is
-``serve/engine.py``; the accounting mirrors its queue/slot structure
-with plans in place of KV caches.
+via ``eid``; with ``verify=True`` it additionally passed the on-device
+self-check of ``core/verify.py``.  Rejections are never silent: the
+request is marked ``served_via="rejected"`` with ``error`` set, and
+``GatewayStats`` counts rejected / retried / deadline_missed /
+breaker_trips / verify_failures.  The slot-pool substrate this models
+itself on is ``serve/engine.py``.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import time
-from typing import Deque, List, Optional, Sequence, Tuple
+from typing import Deque, List, Optional, Sequence
 
 import numpy as np
 
 import jax
 
 from repro.core.distributed import build_dist_graph
-from repro.core.distributed_sharded import (execute_plan_batched,
+from repro.core.distributed_sharded import (_replan_with_plan,
+                                            execute_plan_batched,
                                             plan_sharded_msf)
+from repro.core.graph import CapacityError
 from repro.core.plan import RoundPlan, plan_cache_key
+from repro.core.verify import VerifyFailure, verify_forest
+
+
+class GatewayError(RuntimeError):
+    """Base of the gateway's typed serving errors (ISSUE 7)."""
+
+
+class AdmissionError(GatewayError, ValueError):
+    """A request failed admission control (``validate_graph``).  Also a
+    ``ValueError`` so pre-hardening callers catching that keep working."""
+
+
+def validate_graph(u, v, w, n: int, *, max_edges: Optional[int] = None,
+                   rid: Optional[int] = None) -> None:
+    """Admission control: reject graphs the engine cannot serve honestly.
+
+    Raises ``AdmissionError`` for: ``n < 1``; mismatched edge-array
+    lengths; non-integer endpoint arrays; NaN/±inf weights (``+inf`` is
+    the engine's padding sentinel — admitting it would silently drop
+    the edge, a wrong MSF with no signal); endpoint ids outside
+    ``[0, n)``; more than ``max_edges`` edges (when given).  Self-loops
+    and duplicate edges are *tolerated* — the engines handle both
+    (self-loops die in preprocessing, parallel edges lose the (w, eid)
+    tie) — so adversarial inputs of that shape serve normally.
+    """
+    tag = f"request {rid}: " if rid is not None else ""
+    if n < 1:
+        raise AdmissionError(tag + "n must be >= 1")
+    u = np.asarray(u)
+    v = np.asarray(v)
+    w = np.asarray(w)
+    if not (len(u) == len(v) == len(w)):
+        raise AdmissionError(
+            tag + f"edge arrays disagree in length "
+            f"({len(u)}/{len(v)}/{len(w)})")
+    if max_edges is not None and len(u) > max_edges:
+        raise AdmissionError(
+            tag + f"{len(u)} edges exceed the admission cap "
+            f"max_edges={max_edges}")
+    if len(u) == 0:
+        return
+    if not (np.issubdtype(u.dtype, np.integer)
+            and np.issubdtype(v.dtype, np.integer)):
+        raise AdmissionError(tag + "endpoint arrays must be integer-"
+                             f"typed (got {u.dtype}/{v.dtype})")
+    nonfinite = int((~np.isfinite(np.asarray(w, np.float32))).sum())
+    if nonfinite:
+        raise AdmissionError(
+            tag + f"{nonfinite} weights are NaN/±inf; finite float32 "
+            "required (+inf is the engine's padding sentinel and would "
+            "silently drop the edge)")
+    oob = int(((u < 0) | (u >= n) | (v < 0) | (v >= n)).sum())
+    if oob:
+        raise AdmissionError(
+            tag + f"{oob} endpoint ids outside [0, {n})")
 
 
 @dataclasses.dataclass
@@ -62,10 +140,14 @@ class MSFRequest:
     """One graph to solve: undirected edge arrays + vertex count.
 
     ``family`` is the traffic label used for plan-cache keying (a wrong
-    label can only cost replans, never correctness).  Results are
+    label can only cost replans, never correctness).  ``deadline``
+    optionally bounds serving latency (seconds from submit): a request
+    still queued past it is rejected, never served late.  Results are
     filled by the gateway: ``edges`` are indices into the request's
     undirected input arrays, ``weight``/``count`` the forest weight and
-    edge count, ``served_via`` is ``"batched"`` or ``"replanned"``.
+    edge count, ``served_via`` is ``"batched"``, ``"replanned"`` or
+    ``"rejected"`` (``error`` says why; ``retries`` counts ladder
+    attempts).
     """
     rid: int
     family: str
@@ -73,13 +155,17 @@ class MSFRequest:
     v: np.ndarray
     w: np.ndarray
     n: int
+    deadline: Optional[float] = None
     edges: Optional[np.ndarray] = None
     weight: float = 0.0
     count: int = 0
     done: bool = False
     served_via: str = ""
+    error: str = ""
+    retries: int = 0
     latency: float = 0.0
     _t_submit: float = 0.0
+    _not_before: float = 0.0   # backoff gate (monotonic clock)
 
 
 @dataclasses.dataclass
@@ -87,11 +173,16 @@ class GatewayStats:
     submitted: int = 0
     served: int = 0
     batches: int = 0
-    hits: int = 0          # plan-cache lookups that found an entry
-    misses: int = 0        # lookups that measured a fresh plan
-    evictions: int = 0     # LRU entries dropped at capacity
-    replans: int = 0       # requests that fell back to a measured pass
-    refreshes: int = 0     # drift-triggered entry re-measurements
+    hits: int = 0           # plan-cache lookups that found an entry
+    misses: int = 0         # lookups that measured a fresh plan
+    evictions: int = 0      # LRU entries dropped at capacity
+    replans: int = 0        # requests served via a measured fallback
+    refreshes: int = 0      # drift-triggered entry re-measurements
+    rejected: int = 0       # admission / budget / breaker rejections
+    retried: int = 0        # retry-ladder attempts (flagged requests)
+    deadline_missed: int = 0  # ... of the rejections, past-deadline ones
+    breaker_trips: int = 0  # cache entries dropped by the breaker
+    verify_failures: int = 0  # self-check failures (verify=True only)
 
     @property
     def hit_rate(self) -> float:
@@ -108,7 +199,8 @@ class _CacheEntry:
     plan: RoundPlan
     cap: int               # the padded per-shard capacity (ladder rung)
     served: int = 0        # requests executed under this entry
-    replans: int = 0       # ... of which fell back to a measured pass
+    replans: int = 0       # ... of which the plan did not fit
+    fails: int = 0         # consecutive steps with a still-failing req
 
 
 class MSFGateway:
@@ -119,7 +211,12 @@ class MSFGateway:
                  algorithm: str = "boruvka",
                  cache_size: int = 8, batch_slots: int = 4,
                  pad_margin: float = 0.25,
-                 replan_threshold: float = 0.34, min_samples: int = 6):
+                 replan_threshold: float = 0.34, min_samples: int = 6,
+                 max_retries_per_request: int = 2,
+                 breaker_threshold: int = 3,
+                 backoff_base: float = 0.05,
+                 verify: bool = False,
+                 max_edges: Optional[int] = None):
         self.mesh = mesh
         self.axes = tuple(axis_names or mesh.axis_names)
         self.p = 1
@@ -131,6 +228,11 @@ class MSFGateway:
         self.pad_margin = float(pad_margin)
         self.replan_threshold = float(replan_threshold)
         self.min_samples = int(min_samples)
+        self.max_retries_per_request = int(max_retries_per_request)
+        self.breaker_threshold = int(breaker_threshold)
+        self.backoff_base = float(backoff_base)
+        self.verify = bool(verify)
+        self.max_edges = max_edges
         self.queue: Deque[MSFRequest] = collections.deque()
         # key -> entry; OrderedDict insertion/move order IS the LRU order
         self.cache: "collections.OrderedDict[str, _CacheEntry]" = \
@@ -151,32 +253,73 @@ class MSFGateway:
     # -- admission ---------------------------------------------------------
 
     def submit(self, req: MSFRequest) -> None:
-        if req.n < 1:
-            raise ValueError(f"request {req.rid}: n must be >= 1")
-        if not (len(req.u) == len(req.v) == len(req.w)):
-            raise ValueError(
-                f"request {req.rid}: edge arrays disagree in length "
-                f"({len(req.u)}/{len(req.v)}/{len(req.w)})")
+        """Admit one request, or reject it with a typed error.
+
+        Raises ``AdmissionError`` (a ``ValueError``) on malformed input;
+        the request is additionally marked ``served_via="rejected"``
+        with ``error`` set so drivers that collect requests rather than
+        catch exceptions still see the outcome.
+        """
+        try:
+            validate_graph(req.u, req.v, req.w, req.n,
+                           max_edges=self.max_edges, rid=req.rid)
+        except AdmissionError as e:
+            req.error = str(e)
+            req.served_via = "rejected"
+            req.done = True
+            self.stats.rejected += 1
+            raise
         req._t_submit = time.monotonic()
         self.queue.append(req)
         self.stats.submitted += 1
 
+    def _reject(self, req: MSFRequest, reason: str,
+                deadline: bool = False) -> None:
+        req.error = reason
+        req.served_via = "rejected"
+        req.done = True
+        self.stats.rejected += 1
+        if deadline:
+            self.stats.deadline_missed += 1
+
     # -- serving -----------------------------------------------------------
 
     def step(self) -> List[MSFRequest]:
-        """Serve one batch: admit same-key requests, execute, fill results.
+        """Serve one batch: admit same-key ready requests, execute,
+        run the retry ladder, fill results.
 
-        Returns the list of requests completed by this step (empty if
-        the queue was empty).
+        Returns the list of requests *completed* by this step — served
+        or rejected; a backoff-requeued request completes in a later
+        step (empty list if the queue was empty or nothing was ready).
         """
-        if not self.queue:
-            return []
-        key = self._key(self.queue[0])
+        now = time.monotonic()
+        # deadline sweep: expired requests reject instead of serving late
+        expired: List[MSFRequest] = []
+        alive: Deque[MSFRequest] = collections.deque()
+        while self.queue:
+            r = self.queue.popleft()
+            if r.deadline is not None and now - r._t_submit > r.deadline:
+                self._reject(
+                    r, f"deadline {r.deadline}s exceeded "
+                    f"({now - r._t_submit:.3f}s queued)", deadline=True)
+                expired.append(r)
+            else:
+                alive.append(r)
+        self.queue = alive
+        head = next((r for r in self.queue if r._not_before <= now), None)
+        if head is None:
+            if self.queue:  # everything is backoff-deferred: wait it out
+                wait = min(r._not_before for r in self.queue) - now
+                if wait > 0:
+                    time.sleep(min(wait, 0.1))
+            return expired
+        key = self._key(head)
         batch: List[MSFRequest] = []
         rest: Deque[MSFRequest] = collections.deque()
         while self.queue:
             r = self.queue.popleft()
-            if len(batch) < self.batch_slots and self._key(r) == key:
+            if (len(batch) < self.batch_slots and r._not_before <= now
+                    and self._key(r) == key):
                 batch.append(r)
             else:
                 rest.append(r)
@@ -184,8 +327,22 @@ class MSFGateway:
 
         cap = self._cap_rung(batch[0])
         n = batch[0].n
-        graphs = [build_dist_graph(r.u, r.v, r.w, n, self.p, cap=cap)[0]
-                  for r in batch]
+        graphs = []
+        kept: List[MSFRequest] = []
+        for r in batch:
+            try:
+                graphs.append(build_dist_graph(r.u, r.v, r.w, n, self.p,
+                                               cap=cap)[0])
+                kept.append(r)
+            except CapacityError as e:
+                # build-time capacity shortfalls map to typed rejection
+                # (cannot happen off the rung, which covers 2m/p by
+                # construction — this guards direct/hostile cap paths)
+                self._reject(r, f"capacity: {e}")
+                expired.append(r)
+        batch = kept
+        if not batch:
+            return expired
 
         entry = self.cache.get(key)
         if entry is not None:
@@ -193,25 +350,110 @@ class MSFGateway:
             self.stats.hits += 1
         else:
             self.stats.misses += 1
-            entry = self._measure(key, graphs[0], n, cap)
+            try:
+                entry = self._measure(key, graphs[0], n, cap)
+            except (RuntimeError, CapacityError) as e:
+                # a measurement pass that cannot complete (e.g. faulted
+                # exchanges) rejects the batch instead of crashing run()
+                for r in batch:
+                    self._reject(r, f"plan measurement failed: {e}")
+                    expired.append(r)
+                return expired
 
-        results, replanned = execute_plan_batched(
+        results, flagged = execute_plan_batched(
             graphs, n, self.mesh, entry.plan, axis_names=self.axes,
-            replan=True)
+            replan="defer", verify=self.verify)
         entry.served += len(batch)
-        entry.replans += len(replanned)
-        self.stats.replans += len(replanned)
+        entry.replans += len(flagged)
+
+        # retry ladder: every flagged request either serves via one
+        # strict measured replan, requeues with backoff (verify-failed
+        # replan, budget left), or rejects — bounded per request by
+        # ``max_retries_per_request``, so run() can never loop
+        replanned: List[int] = []
+        requeued: List[MSFRequest] = []
+        still_failing = False
+        for i in flagged:
+            req = batch[i]
+            req.retries += 1
+            self.stats.retried += 1
+            if req.retries > self.max_retries_per_request:
+                still_failing = True
+                self._reject(
+                    req, f"retry budget exhausted ({req.retries - 1} "
+                    f"of {self.max_retries_per_request} retries used)")
+                continue
+            res = None
+            try:
+                res = _replan_with_plan(graphs[i], n, self.mesh,
+                                        self.axes, entry.plan)
+                if int(res[4]) != 0:
+                    req.error = f"replan overflowed ({int(res[4])})"
+                    res = None
+                elif self.verify:
+                    verify_forest(graphs[i], n, self.mesh, res[0],
+                                  res[3], axis_names=self.axes,
+                                  expected_weight=float(res[1]),
+                                  expected_count=int(res[2]))
+            except VerifyFailure as e:
+                self.stats.verify_failures += 1
+                req.error = str(e)
+                res = None
+            except (RuntimeError, CapacityError) as e:
+                req.error = f"replan failed: {e}"
+                res = None
+            if res is not None:
+                results[i] = res
+                replanned.append(i)
+                continue
+            still_failing = True
+            if req.retries >= self.max_retries_per_request:
+                self._reject(
+                    req, f"failed after {req.retries} retries: "
+                    + (req.error or "unrecoverable"))
+            else:
+                req._not_before = time.monotonic() \
+                    + self.backoff_base * (2 ** (req.retries - 1))
+                self.queue.append(req)
+                requeued.append(req)
+
+        # circuit breaker: consecutive failing steps trip the entry —
+        # drop it from the LRU (next miss re-measures fresh) and
+        # quarantine the poisoning requests so they cannot storm run()
+        if still_failing:
+            entry.fails += 1
+            if entry.fails >= self.breaker_threshold:
+                if key in self.cache and self.cache[key] is entry:
+                    self.cache.pop(key)
+                self.stats.breaker_trips += 1
+                for req in requeued:
+                    try:
+                        self.queue.remove(req)
+                    except ValueError:
+                        pass
+                    self._reject(req, "circuit breaker tripped: entry "
+                                 f"{key!r} quarantined after "
+                                 f"{entry.fails} consecutive failing "
+                                 "steps")
+        else:
+            entry.fails = 0
 
         # drift: a key whose traffic keeps outgrowing its plan gets one
-        # fresh measurement (off a graph that actually overflowed) and
-        # new pad() headroom, instead of replanning forever
-        if (replanned and entry.served >= self.min_samples
+        # fresh measurement (off a graph that actually misfit) and new
+        # pad() headroom, instead of replanning forever
+        if (flagged and self.cache.get(key) is entry
+                and entry.served >= self.min_samples
                 and entry.replans / entry.served > self.replan_threshold):
-            self._measure(key, graphs[replanned[-1]], n, cap)
+            self._measure(key, graphs[flagged[-1]], n, cap)
             self.stats.refreshes += 1
 
         now = time.monotonic()
+        completed: List[MSFRequest] = list(expired)
         for i, (req, res) in enumerate(zip(batch, results)):
+            if res is None:
+                if req.done:        # rejected by the ladder/breaker
+                    completed.append(req)
+                continue            # requeued: completes in a later step
             mask = np.asarray(res[0])
             eid = np.asarray(graphs[i].eid)
             req.edges = np.unique(eid[mask])
@@ -220,9 +462,11 @@ class MSFGateway:
             req.served_via = "replanned" if i in replanned else "batched"
             req.latency = now - req._t_submit
             req.done = True
-        self.stats.served += len(batch)
+            self.stats.served += 1
+            completed.append(req)
+        self.stats.replans += len(replanned)
         self.stats.batches += 1
-        return batch
+        return completed
 
     def run(self, max_steps: int = 100_000) -> None:
         steps = 0
