@@ -172,6 +172,7 @@ from repro.core.distributed import (ESENT, CommStats, DistGraph,
                                     quantize_capacity)
 from repro.core.plan import GhostPlan, RoundPlan, RoundSpec
 from repro.kernels.segmin.ops import run_metadata
+from repro.kernels.segmin.segmin import owner_scatter_min
 
 # the ghost push encodes subscriber sets as int32 bitmasks; bit 31 is
 # the sign bit, so meshes beyond this fall back to coalesced lookups
@@ -674,15 +675,39 @@ def _sharded_preprocess(u, v, w, eid, valid, n: int, vps: int,
     return lab_out, mst.astype(bool), dead0, ex.overflow, ex.stats
 
 
-def _owner_scatter_min(comp, wc, ec, oc, okc, base, vps: int):
+def _owner_scatter_min(comp, wc, ec, oc, okc, base, vps: int,
+                       use_pallas: bool = False,
+                       names: Tuple[str, ...] = ()):
     """Owner-side (w, eid)-ordered scatter-min over owned component slots.
 
     Shared by both MINEDGES variants so the tie-break discipline cannot
     diverge between them.  ``comp/wc/ec/oc/okc`` are the flat received
     candidates; slot ``vps`` is the drop row for unused buffer entries.
     Returns (has [vps], other [vps], is_win [flat], off [flat]).
+
+    ``use_pallas=True`` (the ``pallas_minedges`` lever, ISSUE 8) routes
+    the table build through the fused ``owner_scatter_min`` kernel —
+    one grid sweep producing (wmin, emin, other) per owned slot with
+    the identical lexicographic order, no ``[vps+1]`` scatter
+    intermediates — and keeps only the O(flat) winner-confirmation
+    gathers in jnp.  Both branches return bit-identical values (the
+    property wall of tests/test_kernels_fuzz.py pins this).
     """
     off = jnp.where(okc, comp - base, vps)
+    if use_pallas:
+        # garbage buffer rows may hold out-of-range comps: clamp to a
+        # real row, the kernel's ok mask drops them before they touch it
+        idx = jnp.where(okc, comp - base, 0)
+        wt, et, pt, _ = owner_scatter_min(idx, wc, ec, oc, oc, okc, vps)
+        wt = compat.vary(wt, names)
+        et = compat.vary(et, names)
+        pt = compat.vary(pt, names)
+        wmin = jnp.concatenate([wt.astype(wc.dtype),
+                                jnp.full((1,), jnp.inf, wc.dtype)])
+        emin = jnp.concatenate([et, jnp.full((1,), ESENT, jnp.int32)])
+        at_min = okc & (wc == wmin[off])
+        is_win = at_min & (ec == emin[off])
+        return et < ESENT, pt, is_win, off
     wmin = jnp.full((vps + 1,), jnp.inf, wc.dtype).at[off].min(
         jnp.where(okc, wc, jnp.inf))
     at_min = okc & (wc == wmin[off])
@@ -697,7 +722,7 @@ def _owner_scatter_min(comp, wc, ec, oc, okc, base, vps: int):
 
 def _sharded_minedges(ru, rv, wk, eid, alive, vps: int, capacity: int,
                       axes: Tuple[str, ...], schedule: str,
-                      stats: ExchangeStats):
+                      stats: ExchangeStats, use_pallas: bool = False):
     """Owner-computes MINEDGES, 2-exchange variant (the PR 1 baseline).
 
     Each *directed* edge copy ships a ``(comp, w, eid, other)`` candidate
@@ -730,7 +755,8 @@ def _sharded_minedges(ru, rv, wk, eid, alive, vps: int, capacity: int,
     oc = jnp.concatenate([ou, ov])
     okc = jnp.concatenate([oku, okv])
     has, other, is_win, _ = _owner_scatter_min(comp, wc, ec, oc, okc,
-                                               base, vps)
+                                               base, vps, use_pallas,
+                                               names)
     # confirm winners to the submitting slots (both exchanges carry the
     # same (w, eid) for the two copies of an undirected edge, so a slot
     # wins iff either of its endpoint components chose it)
@@ -745,7 +771,8 @@ def _sharded_minedges(ru, rv, wk, eid, alive, vps: int, capacity: int,
 
 def _sharded_minedges_src(ru, rv, wk, eid, alive, runs, vps: int,
                           capacity: int, axes: Tuple[str, ...],
-                          schedule: str, stats: ExchangeStats):
+                          schedule: str, stats: ExchangeStats,
+                          use_pallas: bool = False):
     """Owner-computes MINEDGES, src-only variant (ISSUE 2 lever 3 +
     ISSUE 3 per-run candidate aggregation).
 
@@ -782,28 +809,51 @@ def _sharded_minedges_src(ru, rv, wk, eid, alive, runs, vps: int,
     base = lax.axis_index(names) * vps
     head, head_idx, run_id = runs
     L = ru.shape[0]
-    # per-run segmented (w, eid) argmin over alive slots (O(cap) scratch)
-    wrun = compat.vary(jnp.full((L,), jnp.inf, wk.dtype), names
-                       ).at[run_id].min(wk)
-    at_min = alive & (wk == wrun[run_id])
-    erun = compat.vary(jnp.full((L,), ESENT, jnp.int32), names
-                       ).at[run_id].min(jnp.where(at_min, eid, ESENT))
-    loc_win = at_min & (eid == erun[run_id])
-    orun = compat.vary(jnp.full((L,), -1, jnp.int32), names
-                       ).at[run_id].max(jnp.where(loc_win, rv, -1))
-    crun = compat.vary(jnp.full((L,), -1, jnp.int32), names
-                       ).at[run_id].max(jnp.where(alive, ru, -1))
-    anyrun = compat.vary(jnp.zeros((L,), bool), names
-                         ).at[run_id].max(alive)
-    send = head & anyrun[run_id]
-    comp_c = crun[run_id]
-    ex = routed_exchange((comp_c, wrun[run_id], erun[run_id],
-                          orun[run_id]), comp_c // vps, send, capacity,
+    if use_pallas:
+        # fused combine (ISSUE 8): one kernel sweep yields the per-run
+        # (min w, argmin eid) plus both payload channels — the chosen
+        # other-endpoint component (max rv over the run's argmin slots)
+        # and the run's own component (ru is constant within an equal-u
+        # run, so max-over-alive == ru-at-winner) — without the five
+        # scatter intermediates.  Dead runs come back (inf, ESENT, -1,
+        # -1) in both paths, and alive => finite wk, so run-aliveness
+        # is exactly isfinite(wtbl).
+        wtbl, etbl, otbl, ctbl = owner_scatter_min(
+            run_id, wk, eid, rv, ru, alive, L)
+        wtbl = compat.vary(wtbl.astype(wk.dtype), names)
+        etbl = compat.vary(etbl, names)
+        otbl = compat.vary(otbl, names)
+        ctbl = compat.vary(ctbl, names)
+        at_min = alive & (wk == wtbl[run_id])
+        loc_win = at_min & (eid == etbl[run_id])
+        send = head & jnp.isfinite(wtbl)[run_id]
+        comp_c = ctbl[run_id]
+        payload = (comp_c, wtbl[run_id], etbl[run_id], otbl[run_id])
+    else:
+        # per-run segmented (w, eid) argmin over alive slots (O(cap)
+        # scratch)
+        wrun = compat.vary(jnp.full((L,), jnp.inf, wk.dtype), names
+                           ).at[run_id].min(wk)
+        at_min = alive & (wk == wrun[run_id])
+        erun = compat.vary(jnp.full((L,), ESENT, jnp.int32), names
+                           ).at[run_id].min(jnp.where(at_min, eid, ESENT))
+        loc_win = at_min & (eid == erun[run_id])
+        orun = compat.vary(jnp.full((L,), -1, jnp.int32), names
+                           ).at[run_id].max(jnp.where(loc_win, rv, -1))
+        crun = compat.vary(jnp.full((L,), -1, jnp.int32), names
+                           ).at[run_id].max(jnp.where(alive, ru, -1))
+        anyrun = compat.vary(jnp.zeros((L,), bool), names
+                             ).at[run_id].max(alive)
+        send = head & anyrun[run_id]
+        comp_c = crun[run_id]
+        payload = (comp_c, wrun[run_id], erun[run_id], orun[run_id])
+    ex = routed_exchange(payload, comp_c // vps, send, capacity,
                          names, schedule, stats=stats, site="minedges")
     comp, w_, e_, o_ = (x.reshape(-1) for x in ex.recv)
     okc = ex.recv_ok.reshape(-1)
     has, other, is_win, off = _owner_scatter_min(comp, w_, e_, o_, okc,
-                                                 base, vps)
+                                                 base, vps, use_pallas,
+                                                 names)
     return has, other, is_win, off, ex, loc_win, head_idx
 
 
@@ -885,7 +935,7 @@ def _round_body(u, v, w, eid, live0, lab, mst, dead, runs_u, runs_v,
                 cap_lookup: int, cap_contract: int, cap_push: int,
                 schedule: str, coalesce: bool, src_only: bool,
                 adaptive: bool, ghost: bool, relabel_skip: bool,
-                stats: ExchangeStats):
+                pallas_minedges: bool, stats: ExchangeStats):
     """One MINEDGES → CONTRACT → RELABEL round over 1D-sharded labels.
 
     Shared verbatim by the fused while_loop engine (flat capacities,
@@ -956,7 +1006,8 @@ def _round_body(u, v, w, eid, live0, lab, mst, dead, runs_u, runs_v,
     if src_only:
         has, other, is_win, off, ex, loc_win, head_idx = \
             _sharded_minedges_src(ru, rv, wk, eid, alive, runs_u, vps,
-                                  cap_edge, names, schedule, st)
+                                  cap_edge, names, schedule, st,
+                                  pallas_minedges)
         parent, keep, o4, st = _sharded_contract(
             has, other, n, vps, cap_contract, names, schedule, adaptive,
             ex.stats)
@@ -969,7 +1020,8 @@ def _round_body(u, v, w, eid, live0, lab, mst, dead, runs_u, runs_v,
         o3 = ex.overflow
     else:
         has, other, win, o3, st = _sharded_minedges(
-            ru, rv, wk, eid, alive, vps, cap_edge, names, schedule, st)
+            ru, rv, wk, eid, alive, vps, cap_edge, names, schedule, st,
+            pallas_minedges)
         # both directed copies are confirmed; mark only the canonical
         # one so the global mask is exact-once
         mst = mst | (win & (u < v))
@@ -1000,7 +1052,8 @@ def _sharded_rounds(u, v, w, eid, valid, lab, mst, dead, gstate, vidx,
                     cap_lookup: int, cap_push: int, overflow,
                     stats: ExchangeStats, rounds, schedule: str,
                     coalesce: bool, src_only: bool, adaptive: bool,
-                    ghost: bool, relabel_skip: bool):
+                    ghost: bool, relabel_skip: bool,
+                    pallas_minedges: bool):
     """Borůvka rounds with 1D-sharded labels (fused while_loop, flat caps).
 
     ``active`` optionally restricts the edge set (the filter levels);
@@ -1028,7 +1081,7 @@ def _sharded_rounds(u, v, w, eid, valid, lab, mst, dead, gstate, vidx,
             u, v, w, eid, live0, lab, mst, dead, runs_u, runs_v, vidx,
             gs, settled, n, vps, names, cap_edge, cap_label, cap_lookup,
             cap_label, cap_push, schedule, coalesce, src_only, adaptive,
-            ghost, relabel_skip, st)
+            ghost, relabel_skip, pallas_minedges, st)
         if ghost:
             gu, gv, rsubs = gs
         return (lab, mst, dead, gu, gv, rsubs, settled, go, r + 1,
@@ -1058,7 +1111,8 @@ def _sharded_shard_fn(u, v, w, eid, n: int, vps: int,
                       cap_push: int, schedule: str,
                       local_preprocessing: bool, coalesce: bool,
                       src_only: bool, adaptive: bool, ghost: bool,
-                      relabel_skip: bool, vsorted: bool):
+                      relabel_skip: bool, vsorted: bool,
+                      pallas_minedges: bool):
     names = tuple(axes)
     valid = jnp.isfinite(w)
     base = lax.axis_index(names) * vps
@@ -1102,7 +1156,8 @@ def _sharded_shard_fn(u, v, w, eid, n: int, vps: int,
                   cap_lookup=cap_lookup, cap_push=cap_push,
                   schedule=schedule, coalesce=coalesce, src_only=src_only,
                   adaptive=adaptive, ghost=ghost,
-                  relabel_skip=relabel_skip)
+                  relabel_skip=relabel_skip,
+                  pallas_minedges=pallas_minedges)
     if algorithm == "boruvka":
         lab, mst, dead, gstate, overflow, stats, rounds = _sharded_rounds(
             u, v, w, eid, valid, lab, mst, dead, gstate, vidx, runs_u,
@@ -1140,7 +1195,8 @@ def _build_sharded_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
                       cap_push: int, schedule: str,
                       local_preprocessing: bool, coalesce: bool,
                       src_only: bool, adaptive: bool, ghost: bool,
-                      relabel_skip: bool, vsorted: bool):
+                      relabel_skip: bool, vsorted: bool,
+                      pallas_minedges: bool):
     fn = partial(_sharded_shard_fn, n=n, vps=vps, axes=axes,
                  algorithm=algorithm, num_levels=num_levels,
                  max_rounds=max_rounds, cap_edge=cap_edge,
@@ -1148,7 +1204,8 @@ def _build_sharded_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
                  cap_push=cap_push, schedule=schedule,
                  local_preprocessing=local_preprocessing,
                  coalesce=coalesce, src_only=src_only, adaptive=adaptive,
-                 ghost=ghost, relabel_skip=relabel_skip, vsorted=vsorted)
+                 ghost=ghost, relabel_skip=relabel_skip, vsorted=vsorted,
+                 pallas_minedges=pallas_minedges)
     spec = P(axes)
     return jax.jit(compat.shard_map(
         fn, mesh=mesh,
@@ -1224,7 +1281,8 @@ def _sharded_round_shard_fn(u, v, w, eid, vperm, lab, mst, dead, gu, gv,
                             cap_contract: int, cap_push: int,
                             schedule: str, coalesce: bool,
                             src_only: bool, adaptive: bool, ghost: bool,
-                            relabel_skip: bool, vsorted: bool):
+                            relabel_skip: bool, vsorted: bool,
+                            pallas_minedges: bool):
     names = tuple(axes)
     valid = jnp.isfinite(w)
     live0 = valid & (w > compat.vary(lo, names)) \
@@ -1238,7 +1296,7 @@ def _sharded_round_shard_fn(u, v, w, eid, vperm, lab, mst, dead, gu, gv,
         u, v, w, eid, live0, lab, mst, dead, runs_u, runs_v, vidx,
         gstate, settled, n, vps, names, cap_edge, cap_label, cap_lookup,
         cap_contract, cap_push, schedule, coalesce, src_only, adaptive,
-        ghost, relabel_skip, ExchangeStats.zeros())
+        ghost, relabel_skip, pallas_minedges, ExchangeStats.zeros())
     if ghost:
         gu, gv, root_subs = gstate
     return (lab, mst, dead, gu, gv, root_subs, settled, go,
@@ -1252,13 +1310,15 @@ def _build_sharded_round_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
                             cap_contract: int, cap_push: int,
                             schedule: str, coalesce: bool,
                             src_only: bool, adaptive: bool, ghost: bool,
-                            relabel_skip: bool, vsorted: bool):
+                            relabel_skip: bool, vsorted: bool,
+                            pallas_minedges: bool):
     fn = partial(_sharded_round_shard_fn, n=n, vps=vps, axes=axes,
                  cap_edge=cap_edge, cap_label=cap_label,
                  cap_lookup=cap_lookup, cap_contract=cap_contract,
                  cap_push=cap_push, schedule=schedule, coalesce=coalesce,
                  src_only=src_only, adaptive=adaptive, ghost=ghost,
-                 relabel_skip=relabel_skip, vsorted=vsorted)
+                 relabel_skip=relabel_skip, vsorted=vsorted,
+                 pallas_minedges=pallas_minedges)
     spec = P(axes)
     return jax.jit(compat.shard_map(
         fn, mesh=mesh,
@@ -1521,7 +1581,8 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
                             relabel_skip: bool, vsorted: bool,
                             push_capacity: Optional[int],
                             round_trace: Optional[List[dict]],
-                            plan_out: Optional[dict] = None):
+                            plan_out: Optional[dict] = None,
+                            pallas_minedges: bool = False):
     """Host-orchestrated rounds with per-round shrinking capacities.
 
     Runs the same ``_round_body`` as the fused engine, one jitted step
@@ -1706,7 +1767,7 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
             step = _build_sharded_round_fn(
                 n, vps, mesh, tuple(axes), ce_r, rl_r, lk_r, con_r,
                 cp_r, schedule, coalesce_eff, src_only, adaptive,
-                ghost_round, relabel_skip, vsorted_eff)
+                ghost_round, relabel_skip, vsorted_eff, pallas_minedges)
             (lab, mst, dead, gu, gv, rsubs_dev, settled_dev, go, ovf,
              *st) = step(
                 graph.u, graph.v, graph.w, graph.eid, vperm, lab, mst,
@@ -1851,7 +1912,7 @@ def _planned_shard_fn(u, v, w, eid, n: int, vps: int,
                 spec.cap_relabel, spec.cap_lookup, spec.cap_contract,
                 spec.cap_push, plan.schedule, coalesce_eff,
                 plan.src_only, plan.adaptive_doubling, spec.ghost,
-                plan.relabel_skip, stats)
+                plan.relabel_skip, plan.pallas_minedges, stats)
             overflow += o
         if go is not None:
             # a level still choosing edges after its planned rounds has
@@ -1929,7 +1990,8 @@ def _replan_with_plan(graph: DistGraph, n: int, mesh: jax.sharding.Mesh,
         adaptive_doubling=plan.adaptive_doubling,
         shrink_capacities=True, ghost_cache=plan.ghost is not None,
         relabel_skip=plan.relabel_skip,
-        vsorted_index=plan.vsorted_index, round_trace=round_trace)
+        vsorted_index=plan.vsorted_index,
+        pallas_minedges=plan.pallas_minedges, round_trace=round_trace)
 
 
 def execute_plan_batched(graphs: Sequence[DistGraph], n: int,
@@ -2078,6 +2140,7 @@ def plan_sharded_msf(graph: DistGraph, n: int, mesh: jax.sharding.Mesh,
                      adaptive_doubling: bool = True,
                      ghost_cache: bool = True, relabel_skip: bool = True,
                      vsorted_index: bool = True,
+                     pallas_minedges: bool = False,
                      push_capacity: Optional[int] = None,
                      round_trace: Optional[List[dict]] = None
                      ) -> RoundPlan:
@@ -2124,7 +2187,8 @@ def plan_sharded_msf(graph: DistGraph, n: int, mesh: jax.sharding.Mesh,
         graph, n, mesh, axes, algorithm, num_levels, max_rounds, ce, cl,
         lk, schedule, local_preprocessing, coalesce, src_only,
         adaptive_doubling, ghost_cache, relabel_skip, vsorted_index,
-        push_capacity, round_trace, plan_out=rec)
+        push_capacity, round_trace, plan_out=rec,
+        pallas_minedges=pallas_minedges)
     if int(res[4]):
         raise RuntimeError(
             f"measurement pass overflowed ({int(res[4])} items): a plan "
@@ -2139,7 +2203,8 @@ def plan_sharded_msf(graph: DistGraph, n: int, mesh: jax.sharding.Mesh,
         label_capacity_full=cl, lookup_capacity_full=lk,
         ghost=rec.get("ghost"),
         level_bounds=tuple(rec["level_bounds"]),
-        rounds=tuple(rec["rounds"])).validate()
+        rounds=tuple(rec["rounds"]),
+        pallas_minedges=pallas_minedges).validate()
 
 
 def execute_plan(graph: DistGraph, n: int, mesh: jax.sharding.Mesh,
@@ -2276,6 +2341,7 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
                             ghost_cache: bool = True,
                             relabel_skip: bool = True,
                             vsorted_index: bool = True,
+                            pallas_minedges: bool = False,
                             push_capacity: Optional[int] = None,
                             round_trace: Optional[List[dict]] = None,
                             plan: Optional[RoundPlan] = None,
@@ -2325,6 +2391,15 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
     restores the slot-order v coalescing of PR 3 (the measured
     comparator in benchmarks/sharded_scaling.py; no effect with the
     ghost cache on, which always builds the sorted index).
+
+    ``pallas_minedges=True`` (ISSUE 8) routes both MINEDGES reductions
+    — the pre-routing per-run combine and the owner-side scatter-min —
+    through the fused ``kernels/segmin`` Pallas kernel
+    (``owner_scatter_min``: compiled on TPU, interpreted elsewhere via
+    ``default_interpret``) instead of the jnp scatter path; results are
+    bit-identical (tests/test_kernels_fuzz.py pins the kernel, the
+    equivalence matrix pins the engine) and the jnp path stays the
+    measured comparator (benchmarks/kernels_bench.py).
 
     ``plan`` (ISSUE 5) replays a measured ``RoundPlan`` instead: the
     schedule's per-round capacities become static arguments of one
@@ -2407,13 +2482,14 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
             graph, n, mesh, axes, algorithm, num_levels, max_rounds, ce,
             cl, lk, schedule, local_preprocessing, coalesce, src_only,
             adaptive_doubling, ghost_cache, relabel_skip, vsorted_index,
-            push_capacity, round_trace)
+            push_capacity, round_trace, pallas_minedges=pallas_minedges)
     cp = int(vps if push_capacity is None else push_capacity)
     shard_fn = _build_sharded_fn(n, vps, mesh, axes, algorithm, num_levels,
                                  max_rounds, ce, cl, lk, cp, schedule,
                                  local_preprocessing, coalesce, src_only,
                                  adaptive_doubling, ghost_cache,
-                                 relabel_skip, vsorted_index)
+                                 relabel_skip, vsorted_index,
+                                 pallas_minedges)
     return shard_fn(graph.u, graph.v, graph.w, graph.eid)
 
 

@@ -116,6 +116,9 @@ class RoundPlan(NamedTuple):
     ghost: Optional[GhostPlan]
     level_bounds: Tuple[Tuple[float, float], ...]
     rounds: Tuple[RoundSpec, ...]
+    # trailing with a default so version-1 JSON written before the lever
+    # existed still round-trips (absent key -> jnp comparator path)
+    pallas_minedges: bool = False
 
     # -- structure ---------------------------------------------------------
 
@@ -214,7 +217,8 @@ class RoundPlan(NamedTuple):
             coalesce=self.coalesce, src_only=self.src_only,
             adaptive_doubling=self.adaptive_doubling,
             relabel_skip=self.relabel_skip,
-            vsorted_index=self.vsorted_index)
+            vsorted_index=self.vsorted_index,
+            pallas_minedges=self.pallas_minedges)
 
     # -- serialization -----------------------------------------------------
 
@@ -246,7 +250,8 @@ def plan_cache_key(family: str, n: int, num_shards: int,
                    coalesce: bool = True, src_only: bool = True,
                    adaptive_doubling: bool = True,
                    relabel_skip: bool = True,
-                   vsorted_index: bool = True) -> str:
+                   vsorted_index: bool = True,
+                   pallas_minedges: bool = False) -> str:
     """Stable plan-cache key: (family, n, edge-cap rung, algorithm,
     levers).
 
@@ -263,7 +268,8 @@ def plan_cache_key(family: str, n: int, num_shards: int,
     levers = "".join(
         "1" if f else "0"
         for f in (local_preprocessing, coalesce, src_only,
-                  adaptive_doubling, relabel_skip, vsorted_index))
+                  adaptive_doubling, relabel_skip, vsorted_index,
+                  pallas_minedges))
     return (f"{family}|n{int(n)}|p{int(num_shards)}|c{int(cap_per_shard)}"
             f"|{algorithm}|{schedule}|{levers}")
 

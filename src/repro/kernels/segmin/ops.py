@@ -17,8 +17,11 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.kernels.segmin.ref import (EID_SENTINEL, dense_min_from_candidates,
+                                      owner_scatter_min_ref,
                                       segmin_candidates_ref)
-from repro.kernels.segmin.segmin import default_interpret, segmin_candidates
+from repro.kernels.segmin.segmin import (default_interpret,
+                                         owner_scatter_min,
+                                         segmin_candidates)
 
 
 def run_metadata(values: jax.Array, perm: Optional[jax.Array] = None
@@ -46,6 +49,12 @@ def run_metadata(values: jax.Array, perm: Optional[jax.Array] = None
     if perm is not None:
         values = values[perm]
     L = values.shape[0]
+    if L == 0:
+        # the concatenate below would fabricate a length-1 head for an
+        # empty array; an empty shard has no runs (the fused combine
+        # kernel calls this on possibly-empty per-shard slices)
+        z = jnp.zeros((0,), jnp.int32)
+        return jnp.zeros((0,), bool), z, z
     idx = jnp.arange(L, dtype=jnp.int32)
     head = jnp.concatenate([jnp.ones((1,), bool),
                             values[1:] != values[:-1]])
@@ -74,3 +83,29 @@ def min_edges_dense(seg: jax.Array, w: jax.Array, eid: jax.Array,
     else:
         cw, ce = segmin_candidates_ref(seg, w, eid, alive)
     return dense_min_from_candidates(seg, cw, ce, n)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("size", "block", "out_block",
+                                    "interpret", "use_pallas"))
+def scatter_min_tables(idx: jax.Array, w: jax.Array, eid: jax.Array,
+                       pay1: jax.Array, pay2: jax.Array, ok: jax.Array,
+                       size: int, *, block: int = 512,
+                       out_block: int = 256,
+                       interpret: Optional[bool] = None,
+                       use_pallas: bool = True
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                  jax.Array]:
+    """Fused (w, eid)-lexicographic scatter-min, dispatchable.
+
+    The public face of the phase-3 kernel (``segmin.owner_scatter_min``)
+    with the same ``use_pallas``/``interpret`` dispatch discipline as
+    ``min_edges_dense``; ``use_pallas=False`` routes through the exact
+    sequential oracle (``ref.owner_scatter_min_ref``) — the comparator
+    the property wall pins both against.
+    """
+    if use_pallas:
+        return owner_scatter_min(idx, w, eid, pay1, pay2, ok, size,
+                                 block=block, out_block=out_block,
+                                 interpret=interpret)
+    return owner_scatter_min_ref(idx, w, eid, pay1, pay2, ok, size)

@@ -57,6 +57,50 @@ def segmin_candidates_ref(seg: jax.Array, w: jax.Array, eid: jax.Array,
     return cand_w, cand_eid
 
 
+def owner_scatter_min_ref(idx: jax.Array, w: jax.Array, eid: jax.Array,
+                          pay1: jax.Array, pay2: jax.Array,
+                          ok: jax.Array, size: int
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                     jax.Array]:
+    """Sequential oracle for the fused scatter-min kernel (phase 3).
+
+    One candidate at a time, exact lexicographic (w, eid) update with
+    payload-at-winner carry — the semantics both MINEDGES sites of the
+    sharded engine need, with no reliance on scatter/reduction order.
+    Candidates with ``ok=False`` never contribute (their ``idx`` may be
+    garbage).  Returns (wmin [size], emin [size], pay1 [size],
+    pay2 [size]) with defaults (inf, sentinel, -1, -1).
+    """
+    init = (jnp.full((size,), jnp.inf, jnp.float32),
+            jnp.full((size,), EID_SENTINEL, jnp.int32),
+            jnp.full((size,), -1, jnp.int32),
+            jnp.full((size,), -1, jnp.int32))
+
+    def step(tbl, x):
+        wt, et, p1t, p2t = tbl
+        i, wv, ev, a, b, o = x
+        i = jnp.where(o, jnp.clip(i, 0, size - 1), 0)
+        better = o & (wv < wt[i])
+        e_better = o & (wv == wt[i]) & (ev < et[i])
+        e_tie = o & (wv == wt[i]) & (ev == et[i])
+        take = better | e_better
+        wt = wt.at[i].set(jnp.where(o, jnp.minimum(wt[i], wv), wt[i]))
+        et = et.at[i].set(jnp.where(take, ev, et[i]))
+        p1t = p1t.at[i].set(jnp.where(take, a,
+                                      jnp.where(e_tie,
+                                                jnp.maximum(p1t[i], a),
+                                                p1t[i])))
+        p2t = p2t.at[i].set(jnp.where(take, b,
+                                      jnp.where(e_tie,
+                                                jnp.maximum(p2t[i], b),
+                                                p2t[i])))
+        return (wt, et, p1t, p2t), 0
+
+    (wt, et, p1t, p2t), _ = jax.lax.scan(
+        step, init, (idx, w.astype(jnp.float32), eid, pay1, pay2, ok))
+    return wt, et, p1t, p2t
+
+
 def dense_min_from_candidates(seg: jax.Array, cand_w: jax.Array,
                               cand_eid: jax.Array, n: int
                               ) -> Tuple[jax.Array, jax.Array]:

@@ -25,6 +25,13 @@ array need not be globally sorted (after contraction, ``seg = labels[u]``
 is only piecewise constant in u), which phase 2 handles by combining
 candidates of runs that share a component.
 
+  phase 3 (``owner_scatter_min``, ISSUE 8): the fused min-semiring
+    scatter the sharded engine's MINEDGES runs on both sides of the
+    routed exchange — the pre-routing per-run (w, eid)-argmin combine
+    and the owner-side per-component scatter-min — as one Pallas kernel
+    over arbitrary (unsorted) slot indices, replacing the five-scatter
+    jnp sequence without materialising its intermediate tables.
+
 The (w, eid) pair is reduced lexicographically — the direction-independent
 total order that keeps Borůvka cycle-free under ties.
 """
@@ -82,6 +89,153 @@ def _segmin_kernel(seg_ref, w_ref, eid_ref, alive_ref, cw_ref, ce_ref,
     is_last = seg != nxt  # the final element always differs from -1
     cw_ref[...] = jnp.where(is_last, val_w, inf)
     ce_ref[...] = jnp.where(is_last, val_e, sent)
+
+
+def _scatter_min_kernel(idx_ref, w_ref, eid_ref, p1_ref, p2_ref, ok_ref,
+                        wt_ref, et_ref, p1t_ref, p2t_ref, *,
+                        out_block: int, block: int):
+    """Fused min-semiring scatter: one grid step folds one candidate
+    block into one output tile's (w, eid, payload) accumulator.
+
+    Grid is (out tiles, candidate blocks) with the candidate dimension
+    innermost, so the output tile persists in VMEM across the whole
+    candidate sweep (initialised at the first step).  Per step the
+    block builds the [out_block, block] one-hot hit matrix — the
+    TPU-native replacement for the scatter the jnp path pays five times
+    — and reduces it to the tile's block-local (min w, min eid among
+    w-ties, payload at the (w, eid) winner); a lexicographic combine
+    then folds the block triple into the accumulator.  Payload-at-winner
+    is reduced with max, which is exact because candidates tied on the
+    full (w, eid) key carry identical payloads (both directed copies of
+    an undirected edge ship the same eid and the same opposing
+    component) — the same argument the jnp path's ``.at[].max`` relies
+    on.
+
+    A sparse-band guard skips candidate blocks whose (ok-gated) index
+    range cannot touch this tile: for the pre-routing per-run combine
+    the index column (``run_id``) is non-decreasing, so each candidate
+    block intersects O(1) tiles and the sweep degenerates to the
+    band — the fused equivalent of the segmented scan's contiguity
+    exploitation.  Owner-side (unsorted ``comp - base``) it simply
+    never fires.
+    """
+    c = pl.program_id(1)
+
+    inf = jnp.float32(jnp.inf)
+    sent = jnp.int32(EID_SENTINEL)
+
+    @pl.when(c == 0)
+    def _init():
+        wt_ref[...] = jnp.full((out_block,), inf, jnp.float32)
+        et_ref[...] = jnp.full((out_block,), sent, jnp.int32)
+        p1t_ref[...] = jnp.full((out_block,), -1, jnp.int32)
+        p2t_ref[...] = jnp.full((out_block,), -1, jnp.int32)
+
+    idx = idx_ref[...]
+    ok = ok_ref[...] != 0
+    row0 = pl.program_id(0) * out_block
+    lo = jnp.min(jnp.where(ok, idx, jnp.int32(2 ** 31 - 1)))
+    hi = jnp.max(jnp.where(ok, idx, jnp.int32(-1)))
+
+    @pl.when((lo < row0 + out_block) & (hi >= row0))
+    def _accumulate():
+        w = w_ref[...].astype(jnp.float32)
+        eid = eid_ref[...]
+        rows = row0 + jax.lax.broadcasted_iota(jnp.int32,
+                                               (out_block, block), 0)
+        hit = (idx[None, :] == rows) & ok[None, :]
+        wv = jnp.where(hit, w[None, :], inf)
+        wb = jnp.min(wv, axis=1)
+        tie = hit & (wv == wb[:, None])
+        eb = jnp.min(jnp.where(tie, eid[None, :], sent), axis=1)
+        winm = tie & (eid[None, :] == eb[:, None])
+        p1b = jnp.max(jnp.where(winm, p1_ref[...][None, :], -1), axis=1)
+        p2b = jnp.max(jnp.where(winm, p2_ref[...][None, :], -1), axis=1)
+
+        cw, ce = wt_ref[...], et_ref[...]
+        better = wb < cw
+        wtie = wb == cw
+        e_better = wtie & (eb < ce)
+        e_tie = wtie & (eb == ce)
+        take = better | e_better
+        wt_ref[...] = jnp.minimum(cw, wb)
+        et_ref[...] = jnp.where(better, eb,
+                                jnp.where(wtie, jnp.minimum(ce, eb), ce))
+        p1t_ref[...] = jnp.where(take, p1b,
+                                 jnp.where(e_tie,
+                                           jnp.maximum(p1t_ref[...], p1b),
+                                           p1t_ref[...]))
+        p2t_ref[...] = jnp.where(take, p2b,
+                                 jnp.where(e_tie,
+                                           jnp.maximum(p2t_ref[...], p2b),
+                                           p2t_ref[...]))
+
+
+@functools.partial(jax.jit, static_argnames=("size", "block", "out_block",
+                                             "interpret"))
+def owner_scatter_min(idx: jax.Array, w: jax.Array, eid: jax.Array,
+                      pay1: jax.Array, pay2: jax.Array, ok: jax.Array,
+                      size: int, *, block: int = 512,
+                      out_block: int = 256,
+                      interpret: Optional[bool] = None):
+    """Fused (w, eid)-lexicographic scatter-min into ``size`` slots.
+
+    The phase-3 MINEDGES kernel (ISSUE 8): candidates ``(idx, w, eid,
+    pay1, pay2)`` gated by ``ok`` reduce into per-slot tables — exactly
+    the reduction both MINEDGES sites of the sharded engine perform:
+
+      * owner side, ``idx = comp - base``: the routed candidates'
+        per-owned-component winner tables;
+      * pre-routing combine, ``idx = run_id``: the per-source-run
+        (w, eid)-argmin tables (run ids are one more ownership index,
+        so one kernel serves both sites — the min-semiring framing of
+        PAPERS.md arxiv 2110.04865 made concrete).
+
+    Returns ``(wmin f32 [size], emin i32 [size], pay1 i32 [size],
+    pay2 i32 [size])`` with defaults ``(inf, EID_SENTINEL, -1, -1)``;
+    ``pay*`` carry the payloads of the (w, eid) winner.  Bit-identical
+    to the jnp ``.at[].min``/``.at[].max`` path for any candidate order
+    (min/max are associative-commutative and payloads are constant
+    across exact (w, eid) ties).  ``ok=False`` lanes never contribute —
+    their ``idx`` may be garbage.  Same block/``interpret`` discipline
+    as ``segmin_candidates``.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    L = idx.shape[0]
+    if L == 0 or size == 0:
+        return (jnp.full((size,), jnp.inf, jnp.float32),
+                jnp.full((size,), EID_SENTINEL, jnp.int32),
+                jnp.full((size,), -1, jnp.int32),
+                jnp.full((size,), -1, jnp.int32))
+    block = min(block, max(L, 8))
+    out_block = min(out_block, max(size, 8))
+    pad = (-L) % block
+    if pad:
+        idx = jnp.concatenate([idx, jnp.zeros((pad,), idx.dtype)])
+        w = jnp.concatenate([w, jnp.full((pad,), jnp.inf, w.dtype)])
+        eid = jnp.concatenate([eid, jnp.full((pad,), EID_SENTINEL,
+                                             eid.dtype)])
+        pay1 = jnp.concatenate([pay1, jnp.full((pad,), -1, pay1.dtype)])
+        pay2 = jnp.concatenate([pay2, jnp.full((pad,), -1, pay2.dtype)])
+        ok = jnp.concatenate([ok, jnp.zeros((pad,), ok.dtype)])
+    sp = size + ((-size) % out_block)
+    grid = (sp // out_block, idx.shape[0] // block)
+    cspec = pl.BlockSpec((block,), lambda o, c: (c,))
+    ospec = pl.BlockSpec((out_block,), lambda o, c: (o,))
+    wt, et, p1t, p2t = pl.pallas_call(
+        functools.partial(_scatter_min_kernel, out_block=out_block,
+                          block=block),
+        grid=grid,
+        in_specs=[cspec] * 6,
+        out_specs=[ospec] * 4,
+        out_shape=[jax.ShapeDtypeStruct((sp,), jnp.float32),
+                   jax.ShapeDtypeStruct((sp,), jnp.int32),
+                   jax.ShapeDtypeStruct((sp,), jnp.int32),
+                   jax.ShapeDtypeStruct((sp,), jnp.int32)],
+        interpret=interpret,
+    )(idx, w, eid, pay1, pay2, ok.astype(jnp.int8))
+    return wt[:size], et[:size], p1t[:size], p2t[:size]
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))

@@ -129,6 +129,16 @@ COMBOS = [
     dict(ghost_cache=False),             # all levers minus the cache
     dict(shrink_capacities=False),       # all levers, flat capacities
     dict(),                              # everything incl. the schedule
+    # the ISSUE 8 pallas_minedges lever: the fused kernel must be
+    # bit-identical through every MINEDGES code path — the 2-exchange
+    # baseline, the src-only per-run combine, ghost/vsorted reads, the
+    # shrinking schedule, and the all-on engine
+    dict(OFF, pallas_minedges=True),                     # 2-exchange kernel
+    dict(OFF, src_only=True, pallas_minedges=True),      # fused combine
+    dict(OFF, ghost_cache=True, coalesce=True, pallas_minedges=True),
+    dict(shrink_capacities=False, pallas_minedges=True),  # flat + kernel
+    dict(ghost_cache=False, vsorted_index=False, pallas_minedges=True),
+    dict(pallas_minedges=True),          # everything through the kernel
 ]
 
 for fam in ("random", "clustered", "dup_weights", "disconnected"):
@@ -150,6 +160,44 @@ print("OK")
 
 def test_sharded_optimization_flags_match_oracle():
     out = run_multidevice(SHARDED_FLAGS, ndev=8, timeout=1800)
+    assert "OK" in out
+
+
+# plan measured with the kernel lever, replayed strictly (replan=False)
+# through the Python-unrolled executor with the ISSUE 7 self-verifier on:
+# pins (a) the lever survives the RoundPlan round-trip, (b) replay is
+# bit-identical to the oracle through the kernel path, (c) verify=True
+# accepts the kernel-path forest
+SHARDED_PALLAS_PLAN = inspect.getsource(graph_families) + """
+from jax.sharding import Mesh
+from repro.core import oracle
+from repro.core.distributed import build_dist_graph
+from repro.core.distributed_sharded import (execute_plan,
+                                            plan_sharded_msf)
+from repro.core.plan import RoundPlan
+
+mesh = Mesh(np.array(jax.devices()), ("data",))
+for fam in ("dup_weights", "disconnected"):
+    u, v, w, n = FAMILIES[fam](0)
+    kmask, kweight = oracle.kruskal(u, v, w, n)
+    g, cap = build_dist_graph(u, v, w, n, 8)
+    plan = plan_sharded_msf(g, n, mesh, pallas_minedges=True)
+    assert plan.pallas_minedges
+    plan = RoundPlan.from_json(plan.to_json())  # lever round-trips
+    assert plan.pallas_minedges
+    mask, wt, cnt, lab, ovf, comm = execute_plan(
+        g, n, mesh, plan, replan=False, verify=True)
+    assert int(ovf) == 0, (fam, int(ovf))
+    got = sorted(set(int(e) for e in np.asarray(g.eid)[np.asarray(mask)]))
+    assert got == sorted(np.nonzero(kmask)[0].tolist()), (
+        fam, "edge set differs from oracle through the kernel plan path")
+    assert abs(float(wt) - kweight) < 1e-3 * max(1.0, kweight)
+print("OK")
+"""
+
+
+def test_sharded_pallas_plan_replay_verified():
+    out = run_multidevice(SHARDED_PALLAS_PLAN, ndev=8, timeout=1800)
     assert "OK" in out
 
 

@@ -269,6 +269,62 @@ def test_fault_injection_engine_multidevice():
     assert run_multidevice(FAULTS_ENGINE, ndev=8).strip().endswith("OK")
 
 
+# -- the ISSUE 8 kernel path is never silent either (subprocess) -----------
+
+FAULTS_PALLAS = """
+from jax.sharding import Mesh
+from repro.comm import faults
+from repro.core import oracle
+from repro.core.distributed import build_dist_graph
+from repro.core.distributed_sharded import execute_plan, plan_sharded_msf
+from repro.core.verify import verify_forest
+from repro.data import generators
+
+p = 8
+mesh = Mesh(np.array(jax.devices()), ("data",))
+u, v, w, n = generators.generate("gnm", 256, avg_degree=8.0, seed=0)
+g = build_dist_graph(u, v, w, n, p)[0]
+km, kw = oracle.kruskal(u, v, w, n)
+plan = plan_sharded_msf(g, n, mesh, pallas_minedges=True)
+assert plan.pallas_minedges
+
+# fault-free baseline through the fused kernel: verified, oracle-exact
+out = execute_plan(g, n, mesh, plan, replan=False, verify=True)
+base = np.asarray(out[0])
+assert np.array_equal(np.unique(np.asarray(g.eid)[base]),
+                      np.flatnonzero(km))
+
+# corrupt at the minedges site with the kernel in the loop: injection is
+# attributed, and the outcome is detect-or-tolerate — the PR 7 verifier
+# must see through the kernel path, never a silently wrong forest
+corrupt = faults.FaultPlan(seed=0, specs=(
+    faults.FaultSpec(kind="corrupt", site="minedges", fraction=0.25,
+                     bit=26),))
+detected = False
+try:
+    with faults.inject(corrupt):
+        out_c = execute_plan(g, n, mesh, plan, replan=False)
+        assert float(out_c[5].injected) > 0, "corruption not attributed"
+except RuntimeError:
+    detected = True
+if not detected and not np.array_equal(np.asarray(out_c[0]), base):
+    rep = verify_forest(g, n, mesh, out_c[0], out_c[3],
+                        expected_weight=kw, expected_count=int(km.sum()),
+                        raise_on_fail=False)
+    assert not rep.ok, "corrupted kernel-path forest passed verification"
+
+# fault-free again after injection: kernel path unperturbed
+out2 = execute_plan(g, n, mesh, plan, replan=False, verify=True)
+assert np.array_equal(np.asarray(out2[0]), base)
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_fault_injection_pallas_minedges_multidevice():
+    assert run_multidevice(FAULTS_PALLAS, ndev=8).strip().endswith("OK")
+
+
 # -- the hardened gateway (subprocess) -------------------------------------
 
 GATEWAY_HARDENED = """

@@ -1,0 +1,271 @@
+"""Property-test wall for the fused MINEDGES scatter-min kernel (ISSUE 8).
+
+Three implementations of the (w, eid)-lexicographic scatter-min with
+payload-at-winner carry must stay bit-for-bit identical on adversarial
+inputs:
+
+  * ``segmin.owner_scatter_min`` — the fused Pallas kernel (grid-swept
+    one-hot min-semiring accumulation, interpret mode on CPU);
+  * ``ref.owner_scatter_min_ref`` — the sequential lax.scan oracle, one
+    candidate at a time, no reliance on scatter/reduction order;
+  * the jnp ``.at[].min/.max`` scatter construction the engine used
+    before the kernel (mirrored here verbatim from
+    ``core/distributed_sharded._owner_scatter_min``).
+
+A wrong tie-break here silently corrupts the MSF — on most random
+graphs a bad (w, eid) order still yields a spanning tree of the right
+weight — so the wall pins exact int equality on the eid/payload tables,
+not just weights, across duplicate-(idx, w) tie storms, all-dead
+segments, single-candidate and empty arrays, block-boundary and
+non-dividing lengths, and +inf (INVALID_W) weight tails.
+
+Also pins the ``run_metadata`` L==0 / L==1 guard (satellite: the fused
+combine calls it on possibly-empty per-shard slices) and the per-run
+combine identity the engine's src-only MINEDGES relies on: with the
+run-constant ``ru`` payload, max-over-winners (the kernel's channel 2)
+equals the jnp path's max-over-alive.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.segmin.ops import run_metadata, scatter_min_tables
+from repro.kernels.segmin.ref import (EID_SENTINEL, owner_scatter_min_ref,
+                                      segmin_candidates_ref)
+from repro.kernels.segmin.segmin import owner_scatter_min
+from tests.helpers.hypothesis_compat import given, settings, st
+
+# at least 3 block geometries, including blocks that do not divide the
+# candidate length and out-tiles that do not divide the table size
+BLOCKS = [(8, 8), (16, 32), (128, 64), (512, 256)]
+
+
+def _jnp_scatter_tables(idx, w, eid, pay1, pay2, ok, size):
+    """The pre-kernel engine construction, mirrored bit-for-bit
+    (``_owner_scatter_min``'s jnp branch with a second payload)."""
+    idx = jnp.asarray(idx)
+    w = jnp.asarray(w, jnp.float32)
+    eid = jnp.asarray(eid)
+    ok = jnp.asarray(ok)
+    off = jnp.where(ok, idx, size)  # size = drop row
+    wmin = jnp.full((size + 1,), jnp.inf, jnp.float32).at[off].min(
+        jnp.where(ok, w, jnp.inf))
+    at_min = ok & (w == wmin[off])
+    emin = jnp.full((size + 1,), EID_SENTINEL, jnp.int32).at[off].min(
+        jnp.where(at_min, eid, EID_SENTINEL))
+    is_win = at_min & (eid == emin[off])
+    p1 = jnp.full((size + 1,), -1, jnp.int32).at[off].max(
+        jnp.where(is_win, jnp.asarray(pay1), -1))
+    p2 = jnp.full((size + 1,), -1, jnp.int32).at[off].max(
+        jnp.where(is_win, jnp.asarray(pay2), -1))
+    return wmin[:size], emin[:size], p1[:size], p2[:size]
+
+
+def _assert_tables_equal(got, exp, ctx):
+    gw, ge, g1, g2 = (np.asarray(x) for x in got)
+    ew, ee, e1, e2 = (np.asarray(x) for x in exp)
+    # weights compared with array_equal: inf defaults must match exactly
+    np.testing.assert_array_equal(gw, ew, err_msg=f"{ctx}: wmin")
+    np.testing.assert_array_equal(ge, ee, err_msg=f"{ctx}: emin")
+    np.testing.assert_array_equal(g1, e1, err_msg=f"{ctx}: pay1")
+    np.testing.assert_array_equal(g2, e2, err_msg=f"{ctx}: pay2")
+
+
+def _check_three_way(idx, w, eid, pay1, pay2, ok, size, block, out_block,
+                     ctx):
+    args = (jnp.asarray(idx), jnp.asarray(w, jnp.float32),
+            jnp.asarray(eid), jnp.asarray(pay1), jnp.asarray(pay2),
+            jnp.asarray(ok))
+    kern = owner_scatter_min(*args, size, block=block,
+                             out_block=out_block, interpret=True)
+    ref = owner_scatter_min_ref(*args, size)
+    mirror = _jnp_scatter_tables(idx, w, eid, pay1, pay2, ok, size)
+    _assert_tables_equal(kern, ref, f"{ctx}: kernel vs sequential ref")
+    _assert_tables_equal(kern, mirror, f"{ctx}: kernel vs jnp scatter")
+
+
+def _random_candidates(rng, L, size, tie_heavy, inf_tail):
+    idx = rng.integers(0, size, L).astype(np.int32)
+    if tie_heavy:
+        # duplicate (idx, w) pairs force the eid tie-break to decide
+        w = rng.integers(1, 4, L).astype(np.float32)
+    else:
+        w = rng.uniform(1, 255, L).astype(np.float32)
+    if inf_tail and L:
+        # INVALID_W padding tails: +inf candidates may still carry
+        # ok=True (the engine masks them by aliveness, the kernel must
+        # order them after every finite weight and tie-break exactly)
+        k = rng.integers(0, L + 1)
+        w[L - k:] = np.inf
+    eid = rng.integers(0, 2 ** 20, L).astype(np.int32)
+    pay1 = rng.integers(0, 1000, L).astype(np.int32)
+    pay2 = rng.integers(0, 1000, L).astype(np.int32)
+    ok = rng.random(L) < 0.8
+    return idx, w, eid, pay1, pay2, ok
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 300), st.integers(1, 64),
+       st.integers(0, 2 ** 31 - 1), st.sampled_from(BLOCKS),
+       st.booleans(), st.booleans())
+def test_scatter_min_parity_fuzz(L, size, seed, blocks, tie_heavy,
+                                 inf_tail):
+    block, out_block = blocks
+    rng = np.random.default_rng(seed)
+    cand = _random_candidates(rng, L, size, tie_heavy, inf_tail)
+    _check_three_way(*cand, size, block, out_block,
+                     (L, size, seed, blocks, tie_heavy, inf_tail))
+
+
+@pytest.mark.parametrize("block,out_block", BLOCKS)
+@pytest.mark.parametrize("seed", range(8))
+def test_scatter_min_parity_sweep(seed, block, out_block):
+    """Deterministic random sweep — the hypothesis wall's coverage floor
+    when hypothesis is not installed (the shim skips the @given test)."""
+    rng = np.random.default_rng(seed * 1000 + block)
+    L = int(rng.integers(0, 300))
+    size = int(rng.integers(1, 64))
+    cand = _random_candidates(rng, L, size, tie_heavy=bool(seed % 2),
+                              inf_tail=bool(seed % 3 == 0))
+    _check_three_way(*cand, size, block, out_block,
+                     (seed, L, size, block, out_block))
+
+
+@pytest.mark.parametrize("block,out_block", BLOCKS)
+def test_scatter_min_adversarial_cases(block, out_block):
+    rng = np.random.default_rng(7)
+    cases = {
+        "empty_shard": (0, 8),
+        "single_candidate": (1, 4),
+        "single_slot_table": (37, 1),
+        "block_exact": (block, out_block),       # capacity boundary
+        "block_plus_one": (block + 1, out_block),
+        "block_minus_one": (max(block - 1, 1), out_block),
+    }
+    for name, (L, size) in cases.items():
+        cand = _random_candidates(rng, L, size, tie_heavy=True,
+                                  inf_tail=True)
+        _check_three_way(*cand, size, block, out_block, name)
+    # all-dead segments: every candidate masked out -> pure defaults
+    L, size = 50, 16
+    idx, w, eid, p1, p2, _ = _random_candidates(rng, L, size, False, False)
+    _check_three_way(idx, w, eid, p1, p2, np.zeros(L, bool), size,
+                     block, out_block, "all_dead")
+    got = owner_scatter_min(jnp.asarray(idx), jnp.asarray(w),
+                            jnp.asarray(eid), jnp.asarray(p1),
+                            jnp.asarray(p2), jnp.zeros(L, bool), size,
+                            block=block, out_block=out_block,
+                            interpret=True)
+    assert np.all(np.isinf(np.asarray(got[0])))
+    assert np.all(np.asarray(got[1]) == int(EID_SENTINEL))
+    assert np.all(np.asarray(got[2]) == -1)
+    assert np.all(np.asarray(got[3]) == -1)
+
+
+def test_scatter_min_exact_tie_storm():
+    """Every candidate identical (idx, w) — winner is pure eid order,
+    and equal-eid duplicates resolve payloads by the max rule in all
+    three implementations."""
+    L, size = 96, 4
+    idx = np.full(L, 2, np.int32)
+    w = np.full(L, 5.0, np.float32)
+    eid = np.concatenate([np.full(L // 2, 11, np.int32),
+                          np.arange(L // 2, dtype=np.int32) + 11])
+    rng = np.random.default_rng(0)
+    p1 = rng.integers(0, 100, L).astype(np.int32)
+    p2 = rng.integers(0, 100, L).astype(np.int32)
+    ok = np.ones(L, bool)
+    for block, out_block in BLOCKS:
+        _check_three_way(idx, w, eid, p1, p2, ok, size, block, out_block,
+                         ("tie_storm", block, out_block))
+
+
+def test_scatter_min_dispatcher_routes_both_paths():
+    rng = np.random.default_rng(3)
+    cand = _random_candidates(rng, 130, 12, True, True)
+    args = tuple(jnp.asarray(x) for x in cand)
+    via_kernel = scatter_min_tables(*args, 12, block=16, out_block=8,
+                                    interpret=True, use_pallas=True)
+    via_ref = scatter_min_tables(*args, 12, use_pallas=False)
+    _assert_tables_equal(via_kernel, via_ref, "dispatcher")
+
+
+def test_combine_site_matches_segmin_ref_per_run():
+    """The engine's pre-routing combine keyed by run_id must agree with
+    the phase-1 segmented-scan reference: for run-sorted candidates the
+    kernel's (wmin, emin) table entries at each run id equal the
+    boundary candidates ``segmin_candidates_ref`` emits for that run,
+    and the run-constant channel-2 payload (``ru``) recovered at the
+    winner equals the jnp path's max-over-alive."""
+    rng = np.random.default_rng(11)
+    L = 257  # non-dividing on every block size above
+    u = np.sort(rng.integers(0, 40, L)).astype(np.int32)
+    w = rng.integers(1, 5, L).astype(np.float32)  # heavy ties
+    eid = rng.permutation(L).astype(np.int32)
+    alive = rng.random(L) < 0.7
+    rv = rng.integers(0, 40, L).astype(np.int32)
+    ru = u * 3 + 1  # any run-constant function of u
+    head, head_idx, run_id = (np.asarray(x) for x in run_metadata(
+        jnp.asarray(u)))
+
+    wt, et, p1, p2 = owner_scatter_min(
+        jnp.asarray(run_id), jnp.asarray(w), jnp.asarray(eid),
+        jnp.asarray(rv), jnp.asarray(ru), jnp.asarray(alive), L,
+        block=64, out_block=32, interpret=True)
+    wt, et, p1, p2 = (np.asarray(x) for x in (wt, et, p1, p2))
+
+    cw, ce = (np.asarray(x) for x in segmin_candidates_ref(
+        jnp.asarray(run_id), jnp.asarray(w), jnp.asarray(eid),
+        jnp.asarray(alive)))
+    # boundary candidates live at each run's last slot; its run id keys
+    # the kernel table
+    last = np.concatenate([run_id[1:] != run_id[:-1], [True]])
+    np.testing.assert_array_equal(wt[run_id[last]], cw[last])
+    np.testing.assert_array_equal(et[run_id[last]], ce[last])
+    # run-constant payload: winner-carry == max over the run's alive
+    # slots (the identity that lets the kernel replace the crun scatter)
+    crun = np.full(L, -1, np.int64)
+    np.maximum.at(crun, run_id, np.where(alive, ru, -1))
+    np.testing.assert_array_equal(p2, crun.astype(np.int32))
+
+
+# --------------------------------------------------------------------------
+# run_metadata degenerate shapes (satellite: the fused combine calls it
+# on possibly-empty per-shard slices)
+# --------------------------------------------------------------------------
+
+def test_run_metadata_empty():
+    head, head_idx, run_id = run_metadata(jnp.zeros((0,), jnp.int32))
+    assert head.shape == head_idx.shape == run_id.shape == (0,)
+    assert head.dtype == np.dtype(bool)
+    assert np.asarray(head_idx).dtype == np.int32
+
+
+def test_run_metadata_single():
+    head, head_idx, run_id = run_metadata(jnp.asarray([42], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(head), [True])
+    np.testing.assert_array_equal(np.asarray(head_idx), [0])
+    np.testing.assert_array_equal(np.asarray(run_id), [0])
+
+
+def test_run_metadata_empty_with_perm():
+    head, head_idx, run_id = run_metadata(
+        jnp.zeros((0,), jnp.int32), perm=jnp.zeros((0,), jnp.int32))
+    assert head.shape == (0,)
+    assert run_id.shape == (0,)
+
+
+def test_scatter_min_empty_and_zero_size():
+    z = jnp.zeros((0,), jnp.int32)
+    zw = jnp.zeros((0,), jnp.float32)
+    zb = jnp.zeros((0,), bool)
+    wt, et, p1, p2 = owner_scatter_min(z, zw, z, z, z, zb, 5,
+                                       interpret=True)
+    assert wt.shape == (5,) and np.all(np.isinf(np.asarray(wt)))
+    assert np.all(np.asarray(et) == int(EID_SENTINEL))
+    wt, et, p1, p2 = owner_scatter_min(
+        jnp.asarray([0], jnp.int32), jnp.asarray([1.0], jnp.float32),
+        jnp.asarray([3], jnp.int32), jnp.asarray([7], jnp.int32),
+        jnp.asarray([9], jnp.int32), jnp.asarray([True]), 0,
+        interpret=True)
+    assert wt.shape == (0,) and et.shape == (0,)
