@@ -155,6 +155,106 @@ out["dispatch"] = {
     "a2a_calls_per_request_sequential": calls_seq,
     "a2a_invocation_shrink": calls_seq / max(calls_batched, 1e-9),
 }
+
+# --- recovery (ISSUE 9): checkpoint overhead, resume savings, elastic ---
+from repro.comm import faults as _faults
+from repro.core.distributed_sharded import (DEFAULT_CKPT_EVERY,
+                                            distributed_sharded_msf)
+nr = 256 if SMOKE else 512
+u, v, w, nr = generators.generate("gnm", nr, avg_degree=8.0, seed=11)
+gr, capr = build_dist_graph(u, v, w, nr, p)
+planr = plan_sharded_msf(gr, nr, mesh, axis_names=("data",))
+R = len(planr.rounds)
+
+def best(fn):
+    b = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        b = min(b, time.perf_counter() - t0)
+    return b
+
+# warm both programs (plain one-program replay vs segmented), then the
+# acceptance number: warm wall overhead of the certify+snapshot barrier
+# at the default cadence, plus a dense-cadence (every 2 rounds) worst
+# case for context
+cks_warm = []
+execute_plan(gr, nr, mesh, planr, replan=False)
+execute_plan(gr, nr, mesh, planr, replan=False,
+             ckpt_every=DEFAULT_CKPT_EVERY, ckpt_out=cks_warm)
+execute_plan(gr, nr, mesh, planr, replan=False, ckpt_every=2,
+             ckpt_out=[])
+t_plain = best(lambda: jax.block_until_ready(
+    execute_plan(gr, nr, mesh, planr, replan=False)[0]))
+t_ck = best(lambda: jax.block_until_ready(
+    execute_plan(gr, nr, mesh, planr, replan=False,
+                 ckpt_every=DEFAULT_CKPT_EVERY, ckpt_out=[])[0]))
+t_ck2 = best(lambda: jax.block_until_ready(
+    execute_plan(gr, nr, mesh, planr, replan=False, ckpt_every=2,
+                 ckpt_out=[])[0]))
+
+# resume savings: abort the driver past a dense cadence, resume from
+# the last certified checkpoint, compare against a from-scratch solve
+base_r = distributed_sharded_msf(gr, nr, mesh)
+cks = []
+try:
+    with _faults.inject(_faults.FaultPlan(seed=0, specs=(
+            _faults.FaultSpec(kind="abort", site="minedges",
+                              rounds=(3,)),))):
+        distributed_sharded_msf(gr, nr, mesh, ckpt_every=2, ckpt_out=cks)
+except _faults.ShardAbort:
+    pass
+assert cks, "no certified checkpoint before the injected abort"
+ck = cks[-1]
+res_r = distributed_sharded_msf(gr, nr, mesh, resume_from=ck)
+assert np.array_equal(np.asarray(res_r[0]), np.asarray(base_r[0]))
+t_resume = best(lambda: jax.block_until_ready(
+    distributed_sharded_msf(gr, nr, mesh, resume_from=ck)[0]))
+t_scratch = best(lambda: jax.block_until_ready(
+    distributed_sharded_msf(gr, nr, mesh)[0]))
+
+# elastic restore: the same checkpoint re-keyed onto a p/2 sub-mesh vs
+# solving from scratch on that mesh (wall ratio < 1 means the restore
+# beats a full re-run even after losing half the shards)
+p2 = p // 2
+mesh2 = Mesh(np.array(jax.devices()[:p2]), ("data",))
+g2, cap2 = build_dist_graph(u, v, w, nr, p2)
+ck2 = ck.remap(p2, cap2, np.asarray(g2.u), np.asarray(g2.v),
+               np.asarray(g2.eid))
+res_el = distributed_sharded_msf(g2, nr, mesh2, resume_from=ck2)
+res_sc = distributed_sharded_msf(g2, nr, mesh2)
+eid2 = np.asarray(g2.eid)
+assert np.array_equal(np.unique(eid2[np.asarray(res_el[0])]),
+                      np.unique(eid2[np.asarray(res_sc[0])]))
+t_elastic = best(lambda: jax.block_until_ready(
+    distributed_sharded_msf(g2, nr, mesh2, resume_from=ck2)[0]))
+t_scratch2 = best(lambda: jax.block_until_ready(
+    distributed_sharded_msf(g2, nr, mesh2)[0]))
+
+out["recovery"] = {
+    "n": nr, "plan_rounds": R,
+    "ckpt_every_default": DEFAULT_CKPT_EVERY,
+    "checkpoints_at_default_cadence": len(cks_warm),
+    "t_plain_ms": t_plain * 1e3, "t_ckpt_ms": t_ck * 1e3,
+    "ckpt_overhead_pct": (t_ck / max(t_plain, 1e-9) - 1.0) * 100.0,
+    "ckpt_overhead_dense_pct":
+        (t_ck2 / max(t_plain, 1e-9) - 1.0) * 100.0,
+    "resume": {
+        "rounds_total": int(base_r[5].rounds),
+        "ckpt_round": ck.round_index,
+        "rounds_saved": ck.round_index,
+        "t_resume_ms": t_resume * 1e3,
+        "t_scratch_ms": t_scratch * 1e3,
+        "resume_wall_ratio": t_resume / max(t_scratch, 1e-9),
+    },
+    "elastic": {
+        "p_from": p, "p_to": p2,
+        "t_elastic_resume_ms": t_elastic * 1e3,
+        "t_scratch_p2_ms": t_scratch2 * 1e3,
+        "elastic_wall_ratio": t_elastic / max(t_scratch2, 1e-9),
+        "oracle_identical": True,
+    },
+}
 print(json.dumps(out))
 """
 
@@ -193,6 +293,12 @@ def run(smoke: bool = False) -> None:
          f"us_seq={d['us_per_request_sequential']:.0f};"
          f"batched_speedup={d['batched_speedup']:.2f}x;"
          f"a2a_shrink={d['a2a_invocation_shrink']:.1f}x;B={d['batch']}")
+    r = out["recovery"]
+    emit("serve_msf/recovery", r["t_ckpt_ms"] * 1e3,
+         f"ckpt_overhead_pct={r['ckpt_overhead_pct']:.1f};"
+         f"rounds_saved={r['resume']['rounds_saved']};"
+         f"resume_ratio={r['resume']['resume_wall_ratio']:.2f};"
+         f"elastic_ratio={r['elastic']['elastic_wall_ratio']:.2f}")
     if smoke:
         # CI acceptance (ISSUE 6): repeated-shape traffic must actually
         # reuse plans; the vmapped batch must beat per-request dispatch
@@ -209,11 +315,16 @@ def run(smoke: bool = False) -> None:
     # preserving the sections written by benchmarks/sharded_scaling.py
     path = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
                                         "BENCH_sharded_comm.json"))
+    # acceptance (ISSUE 9): the certify+snapshot barrier at the default
+    # cadence must cost < 15% of the warm plain replay
+    assert out["recovery"]["ckpt_overhead_pct"] < 15.0, out["recovery"]
     bench = {}
     if os.path.exists(path):
         with open(path) as f:
             bench = json.load(f)
-    bench["serve_gateway"] = out
+    bench["serve_gateway"] = {k: v for k, v in out.items()
+                              if k != "recovery"}
+    bench["recovery"] = out["recovery"]
     with open(path, "w") as f:
         json.dump(bench, f, indent=2, sort_keys=True)
 

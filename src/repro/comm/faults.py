@@ -37,6 +37,17 @@ Fault classes (``FaultSpec.kind``):
   * ``stall``        — per-shard stall: shard ``shard`` contributes no
     items to this exchange (its ``valid`` mask is cleared *before* the
     overflow computation, so the stall is not self-detecting).
+  * ``abort``        — shard death (ISSUE 9): the exchange raises the
+    typed ``ShardAbort`` at a matched site on the selected ``rounds``
+    (empty = any round), simulating a mid-run component failure without
+    a process kill.  The engine's host drivers publish their round
+    counter here (``set_round``); under an active abort spec every
+    round bump clears the registered compiled-program caches so the
+    target round's exchange actually retraces and the trace-time raise
+    fires deterministically.  A death returns no transport stats by
+    nature, so attribution is the exception itself: ``ShardAbort``
+    carries the matched site, round and shard, and ``FaultSpec.matches``
+    gates the site exactly like every other kind.
 
 Determinism: item selection is a pure function of
 ``(plan.seed, spec site, item index, shard index)`` — an integer hash
@@ -64,7 +75,29 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-FAULT_KINDS = ("clip", "corrupt", "shuffle_dest", "drop", "stall")
+FAULT_KINDS = ("clip", "corrupt", "shuffle_dest", "drop", "stall",
+               "abort")
+
+# the labelled exchange call sites of the engine + the verifier's own
+# exchange; FaultPlan.validate rejects anything else loudly — a typo'd
+# site would otherwise inject nothing and "pass" chaos vacuously
+KNOWN_SITES = ("", "minedges", "lookup", "contract", "relabel", "push",
+               "prep", "fill", "subscribe", "verify")
+
+
+class ShardAbort(RuntimeError):
+    """A simulated shard death (``kind="abort"``): raised from a
+    labelled exchange site on a selected round.  Carries the matched
+    ``site``, the host driver's ``round`` at the raise, and the
+    spec's ``shard`` — the attribution a dead shard can still give."""
+
+    def __init__(self, site: str, round_: int, shard: int):
+        self.site = site
+        self.round = round_
+        self.shard = shard
+        super().__init__(
+            f"shard {shard} aborted at site {site!r} in round {round_} "
+            "(injected shard death)")
 
 
 class FaultSpec(NamedTuple):
@@ -80,7 +113,9 @@ class FaultSpec(NamedTuple):
     #                           shuffle_dest); selection is hash-seeded
     cap_frac: float = 0.5     # clip: effective capacity multiplier
     bit: int = 12             # corrupt: float32 bit to XOR-flip
-    shard: int = 0            # stall: which shard goes quiet
+    shard: int = 0            # stall/abort: which shard dies/goes quiet
+    rounds: Tuple[int, ...] = ()  # abort: fire on these driver rounds
+    #                               (1-based; empty = any round)
 
     def matches(self, site: str) -> bool:
         if site == "verify":
@@ -98,17 +133,26 @@ class FaultPlan(NamedTuple):
             if s.kind not in FAULT_KINDS:
                 raise ValueError(
                     f"unknown fault kind {s.kind!r}; one of {FAULT_KINDS}")
+            if s.site not in KNOWN_SITES:
+                raise ValueError(
+                    f"unknown exchange site {s.site!r}; one of "
+                    f"{KNOWN_SITES} (a typo'd site would inject nothing "
+                    "and pass chaos vacuously)")
             if not (0.0 <= s.fraction <= 1.0):
                 raise ValueError(f"fraction={s.fraction} not in [0, 1]")
             if not (0.0 < s.cap_frac <= 1.0):
                 raise ValueError(f"cap_frac={s.cap_frac} not in (0, 1]")
             if not (0 <= s.bit < 32):
                 raise ValueError(f"bit={s.bit} not a float32 bit")
+            if any((not isinstance(r, int)) or r < 1 for r in s.rounds):
+                raise ValueError(
+                    f"rounds={s.rounds!r} must be 1-based round ints")
         return self
 
 
 _ACTIVE: Optional[FaultPlan] = None
 _CACHE_CLEARS: List[Callable[[], None]] = []
+_ROUND: int = 0    # host drivers' published round counter (set_round)
 
 
 def register_cache_clear(clear: Callable[[], None]) -> None:
@@ -129,6 +173,32 @@ def active() -> Optional[FaultPlan]:
     return _ACTIVE
 
 
+def set_round(r: int) -> None:
+    """Publish the host driver's current (1-based, about-to-execute)
+    round.  Round-selected aborts fire at trace time, and the engine
+    memoizes compiled rounds — so while an ``abort`` spec is active,
+    every round bump clears the registered caches, forcing the next
+    step to retrace through the (possibly raising) exchange hooks.
+    With no abort spec active this is a counter update and nothing
+    else: zero effect on the fault-free or non-abort paths."""
+    global _ROUND
+    _ROUND = int(r)
+    if _ACTIVE is not None and any(s.kind == "abort"
+                                   for s in _ACTIVE.specs):
+        _clear_caches()
+
+
+def current_round() -> int:
+    return _ROUND
+
+
+def _maybe_abort(specs: Tuple[FaultSpec, ...], site: str) -> None:
+    """Trace-time shard-death hook shared by every apply_* entry."""
+    for s in specs:
+        if s.kind == "abort" and (not s.rounds or _ROUND in s.rounds):
+            raise ShardAbort(site, _ROUND, s.shard)
+
+
 def specs_for(site: str) -> Tuple[FaultSpec, ...]:
     """The active plan's specs matching ``site`` (empty when inactive —
     the exchange primitives trace their pristine fault-free code)."""
@@ -147,11 +217,12 @@ def inject(plan: FaultPlan):
     path is a chaos acceptance criterion, not an accident).  Not
     reentrant: nested injection would make attribution ambiguous.
     """
-    global _ACTIVE
+    global _ACTIVE, _ROUND
     if _ACTIVE is not None:
         raise RuntimeError("a FaultPlan is already active (not reentrant)")
     plan.validate()
     _clear_caches()
+    _ROUND = 0
     _ACTIVE = plan
     try:
         yield plan
@@ -209,6 +280,7 @@ def apply_send(specs: Tuple[FaultSpec, ...], seed: int, site: str,
     keep the static ``capacity`` shape — and ``injected`` the float32
     per-shard count of affected items (psum'd by the caller via
     ``ExchangeStats``)."""
+    _maybe_abort(specs, site)
     inj = jnp.float32(0.0)
     cap_ok = capacity
     me = lax.axis_index(names).astype(jnp.int32)
@@ -241,6 +313,7 @@ def apply_send_scatter(specs: Tuple[FaultSpec, ...], seed: int,
                        valid: jax.Array, capacity: int, p: int,
                        names: Tuple[str, ...]):
     """Send-side faults for ``scatter_updates`` (bitmask multicast)."""
+    _maybe_abort(specs, site)
     inj = jnp.float32(0.0)
     cap_ok = capacity
     me = lax.axis_index(names).astype(jnp.int32)
@@ -275,6 +348,7 @@ def apply_recv(specs: Tuple[FaultSpec, ...], seed: int, site: str,
     ``recv_ok`` after the exchange — the sender's ``sent_ok`` and the
     overflow counter are untouched, so the loss is silent at the
     transport layer by design.  Returns (recv_ok, injected)."""
+    _maybe_abort(specs, site)
     inj = jnp.float32(0.0)
     for k, s in enumerate(specs):
         if s.kind != "drop":

@@ -170,6 +170,7 @@ from repro.comm.exchange import (ExchangeStats, _hops, reply,
 from repro.core.distributed import (ESENT, CommStats, DistGraph,
                                     _doubling_iters, _weight_pivots,
                                     quantize_capacity)
+from repro.core.msf_checkpoint import CheckpointError, MSFCheckpoint
 from repro.core.plan import GhostPlan, RoundPlan, RoundSpec
 from repro.kernels.segmin.ops import run_metadata
 from repro.kernels.segmin.segmin import owner_scatter_min
@@ -177,6 +178,12 @@ from repro.kernels.segmin.segmin import owner_scatter_min
 # the ghost push encodes subscriber sets as int32 bitmasks; bit 31 is
 # the sign bit, so meshes beyond this fall back to coalesced lookups
 MAX_GHOST_SHARDS = 31
+
+# default checkpoint cadence (ISSUE 9): every this-many executed rounds
+# both drivers run the verify barrier and snapshot — amortized to keep
+# the measured overhead under the 15% acceptance bound at default scale
+# (benchmarks/serve_msf.py `recovery` records the number)
+DEFAULT_CKPT_EVERY = 8
 
 
 class VIndex(NamedTuple):
@@ -1571,6 +1578,30 @@ def _contract_capacity_bound(ru: np.ndarray, rv: np.ndarray,
     return max(1, int(np.bincount(comp // vps).max()))
 
 
+def _certified_checkpoint(graph, n, mesh, axes, p, cap, algorithm,
+                          windows, rounds, lvl_next, r_next, plan_pos,
+                          lab, mask_h, dead_h, settled_h, ghost_on, acc):
+    """Invariant barrier + snapshot (ISSUE 9): run the on-device
+    ``core/verify.py`` structural checks against the partial forest and
+    only construct the ``MSFCheckpoint`` on a pass — labels are
+    fixpoints at every round boundary and each chosen edge merges
+    exactly two components, so the mid-run forest satisfies the same
+    invariants as the final one.  A failing barrier returns ``None``
+    (no checkpoint beats an uncertified one)."""
+    from repro.core.verify import verify_forest
+    rep = verify_forest(graph, n, mesh, jnp.asarray(mask_h), lab,
+                        axis_names=axes, raise_on_fail=False)
+    if not rep.ok:
+        return None
+    return MSFCheckpoint.create(
+        n=n, num_shards=p, cap_per_shard=cap, algorithm=algorithm,
+        round_index=rounds, level=lvl_next, round_in_level=r_next,
+        plan_pos=plan_pos, level_bounds=windows,
+        lab=np.asarray(lab), settled=settled_h, mask=mask_h,
+        dead=dead_h, eid=np.asarray(graph.eid), ghost_on=ghost_on,
+        stats_acc=acc)
+
+
 def _shrinking_capacity_msf(graph: DistGraph, n: int,
                             mesh: jax.sharding.Mesh, axes: Tuple[str, ...],
                             algorithm: str, num_levels: int,
@@ -1582,7 +1613,10 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
                             push_capacity: Optional[int],
                             round_trace: Optional[List[dict]],
                             plan_out: Optional[dict] = None,
-                            pallas_minedges: bool = False):
+                            pallas_minedges: bool = False,
+                            ckpt_every: Optional[int] = None,
+                            ckpt_out: Optional[List] = None,
+                            resume_from: Optional[MSFCheckpoint] = None):
     """Host-orchestrated rounds with per-round shrinking capacities.
 
     Runs the same ``_round_body`` as the fused engine, one jitted step
@@ -1632,20 +1666,42 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
     valid_h = np.isfinite(w_h)
     hops = _hops(axes, schedule)
 
+    if plan_out is not None and (resume_from is not None or ckpt_every):
+        raise ValueError(
+            "checkpointing is not supported during plan measurement; "
+            "checkpoint the planned execution via execute_plan instead")
+
     overflow = 0
     acc = np.zeros(_STAT_FIELDS, np.float64)
-    if local_preprocessing:
+    if resume_from is not None:
+        # re-entry (ISSUE 9): the certified snapshot replaces the
+        # preprocessing product wholesale — labels, masks and position
+        # restore bit-exactly, and the ghost tables are rebuilt below
+        # through the existing setup path from the restored (lab, dead)
+        ck = resume_from.validate_for(n, p, cap)
+        if ck.algorithm != algorithm:
+            raise CheckpointError(
+                f"checkpoint algorithm {ck.algorithm!r} does not match "
+                f"this solve's {algorithm!r}")
+        lab = jnp.asarray(ck.lab)
+        pre_mst = jnp.zeros((p * cap,), bool)
+        mst = jnp.asarray(ck.mask)
+        dead = jnp.asarray(ck.dead)
+        acc += ck.stats_acc
+        ghost = ghost and ck.ghost_on
+    elif local_preprocessing:
         prep = _build_sharded_prep_fn(n, vps, mesh, tuple(axes), cl,
                                       schedule)
         lab, pre_mst, dead, ovf, *st = prep(graph.u, graph.v, graph.w,
                                             graph.eid)
         overflow += int(ovf)
         acc += [float(x) for x in st]
+        mst = jnp.zeros((p * cap,), bool)
     else:
         lab = jnp.arange(p * vps, dtype=jnp.int32)
         pre_mst = jnp.zeros((p * cap,), bool)
         dead = jnp.asarray(u_h == v_h)
-    mst = jnp.zeros((p * cap,), bool)
+        mst = jnp.zeros((p * cap,), bool)
     dead_h = np.asarray(dead)
 
     # static host structures: source-run heads (src-only aggregation +
@@ -1690,18 +1746,38 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
         windows = list(zip(los, his))
     else:
         raise ValueError(algorithm)
+    if resume_from is not None:
+        # the snapshot freezes the level windows: recomputing pivots on
+        # a different mesh (elastic restore) could move them, and the
+        # bit-identity contract needs the original partition of work
+        windows = [(float(lo), float(hi))
+                   for lo, hi in resume_from.level_bounds]
     if plan_out is not None:
         plan_out["level_bounds"] = [(float(lo), float(hi))
                                     for lo, hi in windows]
         plan_out["rounds"] = []
 
     rounds = 0
+    start_lvl = start_r = 0
+    settled_resume = None
+    if resume_from is not None:
+        rounds = resume_from.round_index
+        start_lvl = resume_from.level
+        start_r = resume_from.round_in_level
+        settled_resume = resume_from.settled
     for lvl, (lo, hi) in enumerate(windows):
+        if lvl < start_lvl:
+            continue
         active_h = valid_h & (w_h > lo) & (w_h <= hi)
         # settled is per level: a new weight window revives edges
-        settled_dev = jnp.zeros((p * vps,), bool)
-        settled_h = np.zeros(p * vps, bool)
-        r = 0
+        if lvl == start_lvl and settled_resume is not None:
+            settled_dev = jnp.asarray(settled_resume)
+            settled_h = settled_resume.copy()
+            r = start_r
+        else:
+            settled_dev = jnp.zeros((p * vps,), bool)
+            settled_h = np.zeros(p * vps, bool)
+            r = 0
         while r < mr:
             if overflow:
                 # a user-undersized capacity already dropped items: the
@@ -1764,6 +1840,9 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
                     ghost=bool(ghost_round), sentinel=(bound_e == 0)))
             if bound_e == 0:
                 break  # no candidate exists: go would come back False
+            # publish the 1-based round for abort-kind fault specs
+            # (no-op unless an abort spec is active)
+            faults.set_round(rounds + 1)
             step = _build_sharded_round_fn(
                 n, vps, mesh, tuple(axes), ce_r, rl_r, lk_r, con_r,
                 cp_r, schedule, coalesce_eff, src_only, adaptive,
@@ -1801,6 +1880,20 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
                     "pushed_items": float(st[6]),
                     "injected_items": float(st[7]),
                 })
+            if (ckpt_out is not None and ckpt_every
+                    and rounds % ckpt_every == 0 and not overflow):
+                # cadence boundary: certify, then snapshot the re-entry
+                # position — mid-level if the level continues, else the
+                # head of the next level with a fresh settled mask
+                nxt_lvl, nxt_r = (lvl, r) if bool(go) else (lvl + 1, 0)
+                sh = settled_h if bool(go) else np.zeros(p * vps, bool)
+                mask_now = np.asarray(mst) | np.asarray(pre_mst)
+                ck = _certified_checkpoint(
+                    graph, n, mesh, axes, p, cap, algorithm, windows,
+                    rounds, nxt_lvl, nxt_r, None, lab, mask_now,
+                    dead_h, sh, ghost_on, acc)
+                if ck is not None:
+                    ckpt_out.append(ck)
             if not bool(go):
                 break
 
@@ -1965,23 +2058,180 @@ def _build_planned_batch_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
         out_specs=(spec, rep, rep, spec, rep, rep, rep)))
 
 
+def _planned_segment_shard_fn(u, v, w, eid, lab0=None, mst0=None,
+                              dead0=None, settled0=None, *, n: int,
+                              vps: int, axes: Tuple[str, ...],
+                              plan: RoundPlan, start: int, stop: int):
+    """Plan-round segment [start, stop) of the unrolled executor
+    (ISSUE 9: checkpointed / resumed planned execution).
+
+    The same straight-line program as ``_planned_shard_fn``, cut at
+    static plan-round indices so the host can interleave the certify +
+    snapshot barrier between compiled segments, or skip ahead to a
+    checkpoint's ``plan_pos`` with a restored carry.  ``start == 0``
+    runs the setup phases (preprocessing, ghost fill); ``start > 0``
+    takes the carry (lab / mask / dead / settled) instead — the
+    checkpointed mask already folds the preprocessing picks in, and
+    the ghost tables are rebuilt from the restored labels through the
+    existing setup path.  A segment whose first round opens a new
+    filter level ignores ``settled0`` (a new weight window revives
+    edges, same rule as the driver).
+
+    ``residual`` is charged only for levels whose *final* planned
+    round executes inside this segment — earlier segments of a
+    mid-level cut leave the judgement to the segment that runs the
+    level's sentinel.
+
+    Returns the 7-tuple of ``_planned_shard_fn`` plus the (dead,
+    settled) carry the next segment or the checkpoint needs.
+    """
+    names = tuple(axes)
+    valid = jnp.isfinite(w)
+    overflow = jnp.int32(0)
+    stats = ExchangeStats.zeros()
+
+    if start == 0:
+        base = lax.axis_index(names) * vps
+        lab = base + jnp.arange(vps, dtype=jnp.int32)
+        mst = compat.vary(jnp.zeros(u.shape, bool), names)
+        if plan.local_preprocessing:
+            lab, pre_mst, dead, ovf, stats = _sharded_preprocess(
+                u, v, w, eid, valid, n, vps, plan.cap_prep, names,
+                plan.schedule, stats)
+            overflow += ovf
+        else:
+            pre_mst = compat.vary(jnp.zeros(u.shape, bool), names)
+            dead = u == v
+    else:
+        lab, mst, dead = lab0, mst0, dead0
+        pre_mst = compat.vary(jnp.zeros(u.shape, bool), names)
+
+    runs_v = None
+    if plan.ghost is not None:
+        gp = plan.ghost
+        gstate, vidx, runs_u, ovf, stats = _ghost_setup(
+            u, v, valid, valid & ~dead, lab, None, n, vps, gp.table_u,
+            gp.table_v, gp.cap_fill_u, gp.cap_fill_v, gp.cap_subscribe,
+            names, plan.schedule, stats)
+        overflow += ovf
+        nu = lax.pmax(jnp.sum(runs_u[0].astype(jnp.int32)), names)
+        nv = lax.pmax(jnp.sum(vidx.runs[0].astype(jnp.int32)), names)
+        overflow += jnp.maximum(nu - gp.table_u, 0) \
+            + jnp.maximum(nv - gp.table_v, 0)
+    else:
+        gstate = None
+        runs_u = run_metadata(u) if (plan.coalesce or plan.src_only) \
+            else None
+        vidx = _build_v_index(v, valid, n, names) \
+            if (plan.coalesce and plan.vsorted_index) else None
+        runs_v = run_metadata(v) \
+            if (plan.coalesce and not plan.vsorted_index) else None
+
+    residual = jnp.int32(0)
+    start_level = plan.rounds[start].level \
+        if plan.rounds and start < len(plan.rounds) else 0
+    fresh_level = (start == 0 or not plan.rounds
+                   or plan.rounds[start].level
+                   != plan.rounds[start - 1].level)
+    settled = compat.vary(jnp.zeros((vps,), bool), names)
+    for lvl, (lo, hi) in enumerate(plan.level_bounds):
+        if lvl < start_level:
+            continue
+        idxs = [i for i, s in enumerate(plan.rounds) if s.level == lvl]
+        run = [i for i in idxs if start <= i < stop]
+        if not run:
+            continue
+        live0 = valid
+        if len(plan.level_bounds) > 1:
+            live0 = valid & (w > jnp.float32(lo)) & (w <= jnp.float32(hi))
+        if lvl == start_level and not fresh_level:
+            settled = settled0
+        else:
+            settled = compat.vary(jnp.zeros((vps,), bool), names)
+        go = None
+        for i in run:
+            spec = plan.rounds[i]
+            fallback = plan.ghost is not None and not spec.ghost
+            coalesce_eff = plan.coalesce or fallback
+            vidx_r = vidx if (spec.ghost
+                              or (coalesce_eff and vidx is not None)) \
+                else None
+            lab, mst, dead, gstate, settled, go, o, stats = _round_body(
+                u, v, w, eid, live0, lab, mst, dead, runs_u, runs_v,
+                vidx_r, gstate, settled, n, vps, names, spec.cap_edge,
+                spec.cap_relabel, spec.cap_lookup, spec.cap_contract,
+                spec.cap_push, plan.schedule, coalesce_eff,
+                plan.src_only, plan.adaptive_doubling, spec.ghost,
+                plan.relabel_skip, plan.pallas_minedges, stats)
+            overflow += o
+        if go is not None and idxs[-1] < stop:
+            residual += go.astype(jnp.int32)
+
+    full_mask = mst | pre_mst
+    weight = lax.psum(jnp.sum(jnp.where(full_mask, w, 0.0)), names)
+    count = lax.psum(jnp.sum(full_mask.astype(jnp.int32)), names)
+    comm = CommStats(stats.calls, stats.items, stats.bytes,
+                     jnp.int32(stop - start), stats.hits, stats.misses,
+                     stats.pushed, stats.injected)
+    return (full_mask, weight, count, lab, overflow, residual, comm,
+            dead, settled)
+
+
+@functools.lru_cache(maxsize=64)
+def _build_planned_segment_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
+                              axes: Tuple[str, ...], plan: RoundPlan,
+                              start: int, stop: int):
+    fn = partial(_planned_segment_shard_fn, n=n, vps=vps, axes=axes,
+                 plan=plan, start=start, stop=stop)
+    spec = P(axes)
+    nin = 4 if start == 0 else 8
+    return jax.jit(compat.shard_map(
+        fn, mesh=mesh, in_specs=(spec,) * nin,
+        out_specs=(spec, P(), P(), spec, P(), P(), P(), spec, spec)))
+
+
+@functools.lru_cache(maxsize=32)
+def _build_planned_segment_batch_fn(n: int, vps: int,
+                                    mesh: jax.sharding.Mesh,
+                                    axes: Tuple[str, ...],
+                                    plan: RoundPlan, start: int,
+                                    stop: int):
+    """Vmapped segment executor: B same-shape requests skip ahead to
+    one shared ``plan_pos`` with stacked restored carries (the batched
+    resume of ``execute_plan_batched``)."""
+    fn = jax.vmap(partial(_planned_segment_shard_fn, n=n, vps=vps,
+                          axes=axes, plan=plan, start=start, stop=stop))
+    spec = P(None, axes)
+    rep = P(None)
+    nin = 4 if start == 0 else 8
+    return jax.jit(compat.shard_map(
+        fn, mesh=mesh, in_specs=(spec,) * nin,
+        out_specs=(spec, rep, rep, spec, rep, rep, rep, spec, spec)))
+
+
 # fault injection (comm/faults.py, ISSUE 7) must force a retrace when a
 # plan activates/deactivates: every memoized builder of a program that
 # routes through the exchanges registers its invalidator here
 for _b in (_build_sharded_fn, _build_sharded_prep_fn,
            _build_ghost_setup_fn, _build_sharded_round_fn,
-           _build_planned_fn, _build_planned_batch_fn):
+           _build_planned_fn, _build_planned_batch_fn,
+           _build_planned_segment_fn, _build_planned_segment_batch_fn):
     faults.register_cache_clear(_b.cache_clear)
 del _b
 
 
 def _replan_with_plan(graph: DistGraph, n: int, mesh: jax.sharding.Mesh,
                       axes: Tuple[str, ...], plan: RoundPlan,
-                      round_trace: Optional[List[dict]] = None):
+                      round_trace: Optional[List[dict]] = None,
+                      ckpt_every: Optional[int] = None,
+                      ckpt_out: Optional[List] = None,
+                      resume_from: Optional[MSFCheckpoint] = None):
     """One fresh measured pass with the plan's frozen levers — the
     overflow/residual fallback shared by ``distributed_sharded_msf``'s
     plan path, ``execute_plan_batched`` and the serving gateway's
-    strict-measured retry rung."""
+    strict-measured retry rung.  The checkpoint kwargs (ISSUE 9) pass
+    through to the shrinking driver, which is how the gateway's ladder
+    takes certified snapshots during — and resumes interrupted — rungs."""
     return distributed_sharded_msf(
         graph, n, mesh, algorithm=plan.algorithm, axis_names=axes,
         num_levels=len(plan.level_bounds), schedule=plan.schedule,
@@ -1991,7 +2241,9 @@ def _replan_with_plan(graph: DistGraph, n: int, mesh: jax.sharding.Mesh,
         shrink_capacities=True, ghost_cache=plan.ghost is not None,
         relabel_skip=plan.relabel_skip,
         vsorted_index=plan.vsorted_index,
-        pallas_minedges=plan.pallas_minedges, round_trace=round_trace)
+        pallas_minedges=plan.pallas_minedges, round_trace=round_trace,
+        ckpt_every=ckpt_every, ckpt_out=ckpt_out,
+        resume_from=resume_from)
 
 
 def execute_plan_batched(graphs: Sequence[DistGraph], n: int,
@@ -1999,7 +2251,9 @@ def execute_plan_batched(graphs: Sequence[DistGraph], n: int,
                          axis_names: Optional[Sequence[str]] = None,
                          replan=True,
                          stack: bool = True,
-                         verify: bool = False):
+                         verify: bool = False,
+                         resume_from: Optional[
+                             Sequence[MSFCheckpoint]] = None):
     """Replay one measured ``RoundPlan`` on B same-shape graphs at once.
 
     The batch is stacked to ``[B, p * cap]`` and served through the
@@ -2031,6 +2285,14 @@ def execute_plan_batched(graphs: Sequence[DistGraph], n: int,
 
     ``stack=False`` asserts the caller already stacked the arrays
     (``graphs`` is then one ``DistGraph`` of ``[B, p * cap]`` arrays).
+
+    ``resume_from`` (ISSUE 9) is one certified ``MSFCheckpoint`` per
+    request, all sharing the same ``plan_pos``: the batch skips ahead
+    to that plan round in one vmapped segment dispatch with the
+    stacked restored carries, bit-identical to the full batched
+    replay.  Checkpoints are *taken* per request via
+    ``execute_plan(ckpt_every=...)`` — the batched program has no host
+    between rounds to certify at.
     """
     axes = tuple(axis_names or mesh.axis_names)
     p = 1
@@ -2057,9 +2319,38 @@ def execute_plan_batched(graphs: Sequence[DistGraph], n: int,
         def graph_at(i):   # only materialized for replanned requests
             return DistGraph(batched.u[i], batched.v[i], batched.w[i],
                              batched.eid[i])
-    fn = _build_planned_batch_fn(n, vps, mesh, axes, plan)
-    mask, weight, count, lab, ovf, residual, comm = fn(
-        batched.u, batched.v, batched.w, batched.eid)
+    if resume_from is None:
+        fn = _build_planned_batch_fn(n, vps, mesh, axes, plan)
+        out = fn(batched.u, batched.v, batched.w, batched.eid)
+    else:
+        cks = list(resume_from)
+        if len(cks) != batch_size or any(c is None for c in cks):
+            raise CheckpointError(
+                f"batched resume needs one checkpoint per request "
+                f"({batch_size}), got {len(cks)} "
+                f"({sum(c is None for c in cks)} missing)")
+        poss = {c.plan_pos for c in cks}
+        if len(poss) != 1 or None in poss:
+            raise CheckpointError(
+                "batched resume needs every checkpoint at one shared "
+                f"plan position (one compiled segment), got {poss}")
+        cap_b = int(batched.u.shape[1]) // p
+        for c in cks:
+            c.validate_for(n, p, cap_b)
+        pos = int(cks[0].plan_pos)
+        if not 0 < pos <= len(plan.rounds):
+            raise CheckpointError(
+                f"checkpoint plan_pos={pos} is outside this plan's "
+                f"{len(plan.rounds)} rounds — taken against a "
+                "different plan")
+        fn = _build_planned_segment_batch_fn(n, vps, mesh, axes, plan,
+                                             pos, len(plan.rounds))
+        out = fn(batched.u, batched.v, batched.w, batched.eid,
+                 jnp.stack([jnp.asarray(c.lab) for c in cks]),
+                 jnp.stack([jnp.asarray(c.mask) for c in cks]),
+                 jnp.stack([jnp.asarray(c.dead) for c in cks]),
+                 jnp.stack([jnp.asarray(c.settled) for c in cks]))
+    mask, weight, count, lab, ovf, residual, comm = out[:7]
     ovf_h = np.asarray(ovf)
     res_h = np.asarray(residual)
     defer = replan == "defer"
@@ -2212,7 +2503,10 @@ def execute_plan(graph: DistGraph, n: int, mesh: jax.sharding.Mesh,
                  axis_names: Optional[Sequence[str]] = None,
                  replan: bool = True,
                  round_trace: Optional[List[dict]] = None,
-                 verify: bool = False):
+                 verify: bool = False,
+                 ckpt_every: Optional[int] = None,
+                 ckpt_out: Optional[List] = None,
+                 resume_from: Optional[MSFCheckpoint] = None):
     """Replay a measured ``RoundPlan`` on a same-shape graph.
 
     Alias for ``distributed_sharded_msf(graph, n, mesh, plan=plan)``:
@@ -2235,17 +2529,127 @@ def execute_plan(graph: DistGraph, n: int, mesh: jax.sharding.Mesh,
     instead of returning a silently wrong forest.  Concrete inputs
     only — under tracing the check is skipped (the AOT contract folds
     every hazard into ``overflow`` instead).
+
+    Checkpointing (ISSUE 9): ``ckpt_every=k`` with ``ckpt_out`` cuts
+    the unrolled program at plan-round cadence boundaries
+    (``_planned_segment_shard_fn``) and runs the certify + snapshot
+    barrier between compiled segments; ``resume_from=ck`` skips ahead
+    to the checkpoint's ``plan_pos`` with the restored carry.  The
+    interrupted-then-resumed result is bit-identical to the plain
+    one-program replay.  Concrete inputs only (the barrier is a host
+    step); plain calls keep the single-program fast path.
     """
-    out = distributed_sharded_msf(graph, n, mesh, plan=plan,
-                                  axis_names=axis_names, replan=replan,
-                                  round_trace=round_trace)
-    if verify and not isinstance(graph.u, jax.core.Tracer):
+    if ckpt_every is None and ckpt_out is None and resume_from is None:
+        out = distributed_sharded_msf(graph, n, mesh, plan=plan,
+                                      axis_names=axis_names,
+                                      replan=replan,
+                                      round_trace=round_trace)
+        if verify and not isinstance(graph.u, jax.core.Tracer):
+            from repro.core.verify import verify_forest
+            verify_forest(graph, n, mesh, out[0], out[3],
+                          axis_names=axis_names,
+                          expected_weight=float(out[1]),
+                          expected_count=int(out[2]))
+        return out
+    if isinstance(graph.u, jax.core.Tracer):
+        raise ValueError(
+            "checkpointed plan execution interleaves a host barrier "
+            "between compiled segments and needs concrete inputs")
+    axes = tuple(axis_names or mesh.axis_names)
+    p = 1
+    for a in axes:
+        p *= mesh.shape[a]
+    vps = vertices_per_shard(n, p)
+    cap = graph.cap_total // p
+    _validate_plan_shape(plan, n, p, cap)
+    R = len(plan.rounds)
+    start = 0
+    carry = None
+    acc = np.zeros(_STAT_FIELDS, np.float64)
+    total_ovf = total_res = 0
+    if resume_from is not None:
+        ck = resume_from.validate_for(n, p, cap)
+        if ck.plan_pos is None:
+            raise CheckpointError(
+                "this checkpoint was taken by the host driver (no plan "
+                "position); resume it via distributed_sharded_msf("
+                "resume_from=...) instead")
+        if not 0 < ck.plan_pos <= R:
+            raise CheckpointError(
+                f"checkpoint plan_pos={ck.plan_pos} is outside this "
+                f"plan's {R} rounds — it was taken against a different "
+                "plan")
+        start = int(ck.plan_pos)
+        carry = (jnp.asarray(ck.lab), jnp.asarray(ck.mask),
+                 jnp.asarray(ck.dead), jnp.asarray(ck.settled))
+        acc += ck.stats_acc
+    stops = []
+    if ckpt_every:
+        k = int(ckpt_every)
+        stops = list(range((start // k + 1) * k, R, k))
+    stops.append(R)
+    out = None
+    for stop_i in stops:
+        if stop_i <= start:
+            continue
+        fn = _build_planned_segment_fn(n, vps, mesh, axes, plan, start,
+                                       stop_i)
+        args = (graph.u, graph.v, graph.w, graph.eid)
+        out = fn(*args) if start == 0 else fn(*args, *carry)
+        (mask, weight, count, lab, ovf, residual, comm, dead,
+         settled) = out
+        total_ovf += int(ovf)
+        total_res += int(residual)
+        acc += [float(comm[0]), float(comm[1]), float(comm[2]), 0.0,
+                float(comm[4]), float(comm[5]), float(comm[6]),
+                float(comm[7])]
+        if stop_i < R and not total_ovf:
+            lvl_next = plan.rounds[stop_i].level
+            fresh = lvl_next != plan.rounds[stop_i - 1].level
+            settled_h = np.zeros(p * vps, bool) if fresh \
+                else np.asarray(settled)
+            r_next = sum(1 for j in range(stop_i)
+                         if plan.rounds[j].level == lvl_next)
+            ck2 = _certified_checkpoint(
+                graph, n, mesh, axes, p, cap, plan.algorithm,
+                plan.level_bounds, stop_i, lvl_next, r_next, stop_i,
+                lab, np.asarray(mask), np.asarray(dead), settled_h,
+                plan.ghost is not None, acc)
+            if ck2 is not None and ckpt_out is not None:
+                ckpt_out.append(ck2)
+        carry = (lab, mask, dead, settled)
+        start = stop_i
+    if out is None:  # resume_from at plan end: nothing left to run
+        mask, weight, count, lab = (jnp.asarray(ck.mask),
+                                    None, None, jnp.asarray(ck.lab))
+        w_h = np.asarray(graph.w)
+        m_h = np.asarray(ck.mask)
+        weight = np.float32(np.sum(w_h[m_h], dtype=np.float64))
+        count = np.int32(int(m_h.sum()))
+    comm_total = CommStats(np.int32(acc[0]), np.float32(acc[1]),
+                           np.float32(acc[2]),
+                           np.int32(plan.num_rounds),
+                           np.float32(acc[4]), np.float32(acc[5]),
+                           np.float32(acc[6]), np.float32(acc[7]))
+    if total_ovf or total_res:
+        if not replan:
+            raise RuntimeError(
+                f"plan replay does not fit this graph (overflow="
+                f"{total_ovf}, residual levels={total_res}); pad the "
+                "plan, re-measure with plan_sharded_msf, or allow "
+                "replan=True")
+        return _replan_with_plan(graph, n, mesh, axes, plan,
+                                 round_trace=round_trace,
+                                 ckpt_every=ckpt_every,
+                                 ckpt_out=ckpt_out)
+    result = (mask, weight, count, lab, np.int32(total_ovf), comm_total)
+    if verify:
         from repro.core.verify import verify_forest
-        verify_forest(graph, n, mesh, out[0], out[3],
-                      axis_names=axis_names,
-                      expected_weight=float(out[1]),
-                      expected_count=int(out[2]))
-    return out
+        verify_forest(graph, n, mesh, result[0], result[3],
+                      axis_names=axes,
+                      expected_weight=float(result[1]),
+                      expected_count=int(result[2]))
+    return result
 
 
 def vertices_per_shard(n: int, num_shards: int) -> int:
@@ -2346,7 +2750,10 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
                             round_trace: Optional[List[dict]] = None,
                             plan: Optional[RoundPlan] = None,
                             replan: bool = True,
-                            ghost_shard_limit: Optional[int] = None):
+                            ghost_shard_limit: Optional[int] = None,
+                            ckpt_every: Optional[int] = None,
+                            ckpt_out: Optional[List] = None,
+                            resume_from: Optional[MSFCheckpoint] = None):
     """Run the sharded-label distributed MSF on a mesh.
 
     Returns (mask, weight, count, labels, overflow, stats):
@@ -2416,6 +2823,17 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
     ``MAX_GHOST_SHARDS`` threshold of the subscriber-bitmask fallback,
     so the p > 31 auto-disable path is exercisable on small meshes.
 
+    Checkpointing (ISSUE 9, shrinking-capacity path only):
+    ``ckpt_every=k`` with ``ckpt_out`` (a caller list) makes the host
+    driver run the ``core/verify.py`` invariant barrier every k
+    executed rounds and append a certified ``MSFCheckpoint`` on a pass.
+    ``resume_from=ck`` re-enters at the snapshot's (level, round):
+    the resumed run is **bit-identical** to the uninterrupted one on
+    the same mesh, and a ``ck.remap(...)``'d checkpoint restores onto
+    a different shard count (elastic restore — pass the re-partitioned
+    graph).  The fused and planned paths reject these kwargs loudly;
+    checkpointed plan replay lives in ``execute_plan``.
+
     The flags default to the optimized engine; passing
     ``local_preprocessing=False, coalesce=False, src_only=False,
     adaptive_doubling=False, shrink_capacities=False, ghost_cache=False,
@@ -2429,7 +2847,14 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
         p *= mesh.shape[a]
     vps = vertices_per_shard(n, p)
     cap = graph.cap_total // p
+    wants_ckpt = (ckpt_every is not None or ckpt_out is not None
+                  or resume_from is not None)
     if plan is not None:
+        if wants_ckpt:
+            raise ValueError(
+                "checkpointing a plan replay goes through execute_plan("
+                "ckpt_every=..., resume_from=...), which segments the "
+                "unrolled program at cadence boundaries")
         _validate_plan_shape(plan, n, p, cap)
         fn = _build_planned_fn(n, vps, mesh, axes, plan)
         out = fn(graph.u, graph.v, graph.w, graph.eid)
@@ -2482,7 +2907,14 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
             graph, n, mesh, axes, algorithm, num_levels, max_rounds, ce,
             cl, lk, schedule, local_preprocessing, coalesce, src_only,
             adaptive_doubling, ghost_cache, relabel_skip, vsorted_index,
-            push_capacity, round_trace, pallas_minedges=pallas_minedges)
+            push_capacity, round_trace, pallas_minedges=pallas_minedges,
+            ckpt_every=ckpt_every, ckpt_out=ckpt_out,
+            resume_from=resume_from)
+    if wants_ckpt:
+        raise ValueError(
+            "checkpointing needs the host-driven shrinking-capacity "
+            "path (shrink_capacities=True, concrete inputs): the fused "
+            "single-program engine has no round boundary to snapshot at")
     cp = int(vps if push_capacity is None else push_capacity)
     shard_fn = _build_sharded_fn(n, vps, mesh, axes, algorithm, num_levels,
                                  max_rounds, ce, cl, lk, cp, schedule,

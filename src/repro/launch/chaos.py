@@ -39,6 +39,15 @@ active).  It also measures the warm-path overhead of
 ``execute_plan(verify=True)`` (the O(n/p) self-check the gateway can
 switch on); full mode merges a ``chaos`` section with the matrix and
 the overhead numbers into ``BENCH_sharded_comm.json``.
+
+Recovery cells (ISSUE 9) kill the engine *mid-run*: an ``abort`` fault
+raises ``ShardAbort`` at a round past the checkpoint cadence, the cell
+resumes from the last certified ``MSFCheckpoint`` and asserts the
+result is **bit-identical** to the fault-free run with re-executed
+rounds ≤ the cadence; the elastic cell additionally remaps the
+checkpoint onto a p/2-shard sub-mesh (re-partitioned edges, re-owner-
+mapped vertex state) and asserts the exact Kruskal-oracle edge set.
+Both run in ``--smoke`` (the CI gate) and in full mode.
 """
 import argparse  # noqa: E402
 import json  # noqa: E402
@@ -53,9 +62,9 @@ from jax.sharding import Mesh  # noqa: E402
 from repro.comm import faults  # noqa: E402
 from repro.core import oracle  # noqa: E402
 from repro.core.distributed import build_dist_graph  # noqa: E402
-from repro.core.distributed_sharded import (execute_plan,  # noqa: E402
-                                            execute_plan_batched,
-                                            plan_sharded_msf)
+from repro.core.distributed_sharded import (  # noqa: E402
+    distributed_sharded_msf, execute_plan, execute_plan_batched,
+    plan_sharded_msf)
 from repro.core.graph import CapacityError  # noqa: E402
 from repro.core.verify import verify_forest  # noqa: E402
 from repro.data import generators  # noqa: E402
@@ -219,6 +228,94 @@ def run_matrix(families, n: int, seed: int, batched: bool,
     return cells
 
 
+def run_recovery_cells(families, n: int, seed: int, ckpt_every: int = 2,
+                       elastic: bool = True,
+                       verbose: bool = True) -> List[dict]:
+    """Kill-mid-run cells (ISSUE 9): abort past the cadence, resume.
+
+    Per family: run the host driver fault-free, then again with
+    ``ckpt_every`` under an ``abort`` injection at round
+    ``ckpt_every + 1`` (a round *after* at least one certified
+    checkpoint), catch the ``ShardAbort``, resume from the last
+    checkpoint and assert (a) the resumed forest is bit-identical to
+    the fault-free one and (b) re-executed rounds ≤ the cadence.  The
+    elastic cell remaps the pre-abort checkpoint onto a p/2 sub-mesh
+    with edges re-partitioned from the host store and asserts the
+    resumed MSF equals the Kruskal oracle's edge set exactly.
+    """
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    p = mesh.devices.size
+    cells: List[dict] = []
+    abort_round = ckpt_every + 1
+    for family in families:
+        u, v, w, n2 = generators.generate(family, n, avg_degree=8.0,
+                                          seed=seed)
+        g = build_dist_graph(u, v, w, n2, p)[0]
+        km, _ = oracle.kruskal(u, v, w, n2)
+        base = distributed_sharded_msf(g, n2, mesh)
+        base_mask = np.asarray(base[0])
+        assert _oracle_identical(g, base_mask, km), \
+            f"{family}: fault-free driver baseline != Kruskal oracle"
+        assert int(base[5].rounds) >= abort_round, \
+            f"{family}: solve ends in {int(base[5].rounds)} rounds, " \
+            f"before the injected abort at round {abort_round}"
+        fp = faults.FaultPlan(seed=seed, specs=(
+            faults.FaultSpec(kind="abort", site="minedges",
+                             rounds=(abort_round,)),))
+        cks: List = []
+        died = False
+        try:
+            with faults.inject(fp):
+                distributed_sharded_msf(g, n2, mesh,
+                                        ckpt_every=ckpt_every,
+                                        ckpt_out=cks)
+        except faults.ShardAbort:
+            died = True
+        assert died, f"{family}: abort round {abort_round} never fired"
+        assert cks, f"{family}: no certified checkpoint before abort"
+        ck = cks[-1]
+        res = distributed_sharded_msf(g, n2, mesh, resume_from=ck)
+        identical = (np.array_equal(np.asarray(res[0]), base_mask)
+                     and float(res[1]) == float(base[1])
+                     and int(res[2]) == int(base[2]))
+        re_exec = abort_round - 1 - ck.round_index
+        cells.append({"cell": "resume", "family": family,
+                      "abort_round": abort_round,
+                      "ckpt_round": ck.round_index,
+                      "re_executed_rounds": re_exec,
+                      "bit_identical": bool(identical)})
+        assert identical, \
+            f"{family}: resumed run != fault-free run (ckpt {ck!r})"
+        assert 0 <= re_exec <= ckpt_every, \
+            f"{family}: {re_exec} re-executed rounds > cadence " \
+            f"{ckpt_every}"
+        if verbose:
+            print(f"  resume       {family:<6} driver   -> recovered "
+                  f"(ckpt@r{ck.round_index}, re-exec {re_exec} <= "
+                  f"{ckpt_every}, bit-identical)")
+        if elastic and family == families[0]:
+            p2 = max(1, p // 2)
+            mesh2 = Mesh(np.array(jax.devices()[:p2]), ("data",))
+            g2, cap2 = build_dist_graph(u, v, w, n2, p2)
+            ck2 = ck.remap(p2, cap2, np.asarray(g2.u), np.asarray(g2.v),
+                           np.asarray(g2.eid))
+            res2 = distributed_sharded_msf(g2, n2, mesh2,
+                                           resume_from=ck2)
+            ok = (_oracle_identical(g2, np.asarray(res2[0]), km)
+                  and int(res2[4]) == 0)
+            cells.append({"cell": "elastic", "family": family,
+                          "p_from": p, "p_to": p2,
+                          "ckpt_round": ck.round_index,
+                          "oracle_identical": bool(ok)})
+            assert ok, \
+                f"{family}: elastic p{p}->p{p2} restore != oracle"
+            if verbose:
+                print(f"  elastic      {family:<6} p{p}->p{p2}  -> "
+                      f"recovered (ckpt@r{ck.round_index}, oracle-"
+                      "identical edge set)")
+    return cells
+
+
 def measure_verify_overhead(n: int, seed: int, iters: int = 5) -> dict:
     """Warm-path cost of execute_plan(verify=True) vs verify=False."""
     mesh = Mesh(np.array(jax.devices()), ("data",))
@@ -267,6 +364,12 @@ def main() -> None:
             print(f"SILENT: {c}")
         raise SystemExit(1)
 
+    # kill-mid-run recovery (ISSUE 9): smoke gets one resume cell and
+    # one elastic p->p/2 cell; full covers both families
+    rec_families = ("gnm",) if args.smoke else ("gnm", "rgg2d")
+    rec_cells = run_recovery_cells(rec_families, n, args.seed)
+    print(f"recovery: {len(rec_cells)} cells, all recovered")
+
     overhead = measure_verify_overhead(n, args.seed)
     print(f"verify=True overhead: {overhead['verify_overhead_x']}x "
           f"({overhead['t_plain_ms']}ms -> {overhead['t_verify_ms']}ms "
@@ -282,6 +385,7 @@ def main() -> None:
                 bench = json.load(f)
         bench["chaos"] = {"n": n, "seed": args.seed, "cells": cells,
                           "verdict_counts": counts,
+                          "recovery_cells": rec_cells,
                           "verify_overhead": overhead}
         with open(path, "w") as f:
             json.dump(bench, f, indent=2, sort_keys=True)

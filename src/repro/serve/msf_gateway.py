@@ -73,10 +73,12 @@ import numpy as np
 import jax
 
 from repro.core.distributed import build_dist_graph
-from repro.core.distributed_sharded import (_replan_with_plan,
+from repro.core.distributed_sharded import (DEFAULT_CKPT_EVERY,
+                                            _replan_with_plan,
                                             execute_plan_batched,
                                             plan_sharded_msf)
 from repro.core.graph import CapacityError
+from repro.core.msf_checkpoint import CheckpointError, MSFCheckpoint
 from repro.core.plan import RoundPlan, plan_cache_key
 from repro.core.verify import VerifyFailure, verify_forest
 
@@ -166,6 +168,9 @@ class MSFRequest:
     latency: float = 0.0
     _t_submit: float = 0.0
     _not_before: float = 0.0   # backoff gate (monotonic clock)
+    # last certified checkpoint from a retry-ladder rung (ISSUE 9): the
+    # next rung resumes here instead of re-executing from round 0
+    _ckpt: Optional[MSFCheckpoint] = None
 
 
 @dataclasses.dataclass
@@ -183,6 +188,8 @@ class GatewayStats:
     deadline_missed: int = 0  # ... of the rejections, past-deadline ones
     breaker_trips: int = 0  # cache entries dropped by the breaker
     verify_failures: int = 0  # self-check failures (verify=True only)
+    resumed: int = 0        # ladder rungs resumed from a checkpoint
+    rounds_saved: int = 0   # rounds *not* re-executed thanks to resume
 
     @property
     def hit_rate(self) -> float:
@@ -216,7 +223,8 @@ class MSFGateway:
                  breaker_threshold: int = 3,
                  backoff_base: float = 0.05,
                  verify: bool = False,
-                 max_edges: Optional[int] = None):
+                 max_edges: Optional[int] = None,
+                 ckpt_every: Optional[int] = DEFAULT_CKPT_EVERY):
         self.mesh = mesh
         self.axes = tuple(axis_names or mesh.axis_names)
         self.p = 1
@@ -233,6 +241,10 @@ class MSFGateway:
         self.backoff_base = float(backoff_base)
         self.verify = bool(verify)
         self.max_edges = max_edges
+        # checkpoint cadence for retry-ladder rungs (ISSUE 9; None
+        # disables): a failed rung leaves its last certified checkpoint
+        # on the request, and the next rung resumes there
+        self.ckpt_every = None if ckpt_every is None else int(ckpt_every)
         self.queue: Deque[MSFRequest] = collections.deque()
         # key -> entry; OrderedDict insertion/move order IS the LRU order
         self.cache: "collections.OrderedDict[str, _CacheEntry]" = \
@@ -383,10 +395,36 @@ class MSFGateway:
                     req, f"retry budget exhausted ({req.retries - 1} "
                     f"of {self.max_retries_per_request} retries used)")
                 continue
+            # deadline re-check per rung (ISSUE 9 bugfix): the entry
+            # sweep ran before the batched dispatch, so a slow batch or
+            # a backoff sleep could land this *dispatch* past the
+            # request's deadline — reject here, never serve late
+            now_r = time.monotonic()
+            if (req.deadline is not None
+                    and now_r - req._t_submit > req.deadline):
+                self._reject(
+                    req, f"deadline {req.deadline}s exceeded before "
+                    f"retry dispatch ({now_r - req._t_submit:.3f}s "
+                    "since submit)", deadline=True)
+                continue
+            # deadline-aware cadence skip: past half the budget the
+            # barrier overhead hurts more than a potential resume saves
+            ck_every = self.ckpt_every
+            if (ck_every and req.deadline is not None
+                    and now_r - req._t_submit > 0.5 * req.deadline):
+                ck_every = None
+            cks: List[MSFCheckpoint] = []
             res = None
             try:
+                if req._ckpt is not None:
+                    self.stats.resumed += 1
+                    self.stats.rounds_saved += req._ckpt.round_index
                 res = _replan_with_plan(graphs[i], n, self.mesh,
-                                        self.axes, entry.plan)
+                                        self.axes, entry.plan,
+                                        ckpt_every=ck_every,
+                                        ckpt_out=cks if ck_every
+                                        else None,
+                                        resume_from=req._ckpt)
                 if int(res[4]) != 0:
                     req.error = f"replan overflowed ({int(res[4])})"
                     res = None
@@ -399,9 +437,21 @@ class MSFGateway:
                 self.stats.verify_failures += 1
                 req.error = str(e)
                 res = None
+            except CheckpointError as e:
+                # a checkpoint that fails restore validation is dropped
+                # — the next rung re-executes from round 0 rather than
+                # resuming a corrupted snapshot
+                req._ckpt = None
+                req.error = f"checkpoint restore failed: {e}"
+                res = None
             except (RuntimeError, CapacityError) as e:
                 req.error = f"replan failed: {e}"
                 res = None
+            if cks:
+                # keep the furthest certified checkpoint: a later rung
+                # (after requeue/backoff) resumes there instead of
+                # re-executing the whole solve
+                req._ckpt = cks[-1]
             if res is not None:
                 results[i] = res
                 replanned.append(i)

@@ -1,0 +1,334 @@
+"""Round-level checkpointing and elastic resume (ISSUE 9).
+
+In-process: the ``MSFCheckpoint`` value itself — per-shard CRC32
+integrity (construction roundtrips; a byte flipped at rest is a typed
+``CheckpointError`` naming the corrupted shard), the ``validate_for``
+shape gate, the pure-numpy ``remap`` semantics (vertex state transfers
+verbatim, the MSF mask is re-derived as the canonical ``u < v`` copy
+per chosen eid, dead edges become exactly the label-internal slots),
+and ``latest_certified``.
+
+Subprocess (8 virtual devices): interrupted-then-resumed equals
+uninterrupted, bit for bit — through the host driver (both
+algorithms), the segmented planned executor (every cadence cut), and
+the batched executor's shared skip-ahead; a ``ShardAbort`` injected
+past the cadence recovers from the last certified checkpoint; and a
+checkpoint taken on 8 shards restores onto 4- and 2-shard meshes with
+the exact same MSF edge set (elastic restore)."""
+import numpy as np
+import pytest
+
+from repro.core.msf_checkpoint import (CheckpointError, MSFCheckpoint,
+                                       latest_certified)
+from tests.helpers.subproc import run_multidevice
+
+
+# -- the checkpoint value (in-process, no devices) --------------------------
+
+def _small_ck(**over):
+    """n=4 on p=2 shards (vps=2, cap/shard=3): components {0,1} and
+    {2,3}, MSF eids {5, 7} chosen, one dead duplicate + padding."""
+    kw = dict(
+        n=4, num_shards=2, cap_per_shard=3, algorithm="boruvka",
+        round_index=3, level=0, round_in_level=3, plan_pos=None,
+        level_bounds=((0.0, 1.0),),
+        lab=np.asarray([0, 0, 2, 2], np.int32),
+        settled=np.asarray([True, False, False, False]),
+        mask=np.asarray([True, False, True, False, False, False]),
+        dead=np.asarray([False, True, False, False, True, True]),
+        eid=np.asarray([5, 5, 7, 9, 0, 0], np.int32),
+        ghost_on=True, stats_acc=np.zeros(8))
+    kw.update(over)
+    return MSFCheckpoint.create(**kw)
+
+
+def test_create_roundtrips_and_derives_eids():
+    ck = _small_ck()
+    assert ck.verify_checksums() is ck
+    assert np.array_equal(ck.eids, [5, 7])       # unique ids under mask
+    assert ck.mst_count == 2
+    assert ck.level_bounds == ((0.0, 1.0),)
+    assert ck.checksums.shape == (2,)
+    # compact repr, not an array dump
+    r = repr(ck)
+    assert "round=3" in r and "edges=2" in r and "[" not in r
+    # create() copies: mutating the source arrays can't skew the snapshot
+    src = np.asarray([0, 0, 2, 2], np.int32)
+    ck2 = _small_ck(lab=src)
+    src[0] = 99
+    assert ck2.lab[0] == 0
+    ck2.verify_checksums()
+
+
+def test_corruption_at_rest_is_typed_and_names_the_shard():
+    ck = _small_ck()
+    ck.lab[3] ^= 1                    # vid 3 lives on shard 1 (vps=2)
+    with pytest.raises(CheckpointError, match=r"\[1\]"):
+        ck.verify_checksums()
+    ck = _small_ck()
+    ck.mask[0] = False                # slot 0 lives on shard 0
+    with pytest.raises(CheckpointError, match=r"\[0\]"):
+        ck.verify_checksums()
+    ck = _small_ck()
+    ck.dead[1] = False
+    ck.settled[2] = True              # both shards touched
+    with pytest.raises(CheckpointError, match=r"\[0, 1\]"):
+        ck.verify_checksums()
+    # CheckpointError is a RuntimeError: engine-level handlers hold
+    assert issubclass(CheckpointError, RuntimeError)
+
+
+def test_validate_for_shape_gate():
+    ck = _small_ck()
+    assert ck.validate_for(4, 2, 3) is ck
+    for args in ((5, 2, 3), (4, 4, 3), (4, 2, 8)):
+        with pytest.raises(CheckpointError, match="remap"):
+            ck.validate_for(*args)
+    # the gate re-checks content too, not just shapes
+    ck.lab[0] ^= 1
+    with pytest.raises(CheckpointError, match="checksum"):
+        ck.validate_for(4, 2, 3)
+
+
+def test_remap_rekeys_onto_a_smaller_mesh():
+    ck = _small_ck()
+    # re-partitioned at p'=1, cap'=6: both directed copies of eid 5 and
+    # 9, the canonical copy of 7, and one padding slot (u=v=eid=0)
+    u2 = np.asarray([0, 1, 2, 0, 2, 0], np.int32)
+    v2 = np.asarray([1, 0, 3, 2, 0, 0], np.int32)
+    e2 = np.asarray([5, 5, 7, 9, 9, 0], np.int32)
+    rk = ck.remap(1, 6, u2, v2, e2)
+    assert (rk.num_shards, rk.cap_per_shard) == (1, 6)
+    # vertex state transfers verbatim on [:n]
+    assert np.array_equal(rk.lab, [0, 0, 2, 2])
+    assert np.array_equal(rk.settled, [True, False, False, False])
+    # the MSF mask marks exactly the canonical u < v copy per chosen eid
+    assert np.array_equal(rk.mask, [True, False, True, False, False,
+                                    False])
+    assert np.array_equal(rk.eids, ck.eids)
+    # dead = label-internal edges (padding u=v=0 is label-internal too)
+    assert np.array_equal(rk.dead, [True, True, True, False, False,
+                                    True])
+    # position and windows carry over; the new checkpoint is certified
+    assert (rk.round_index, rk.level, rk.round_in_level) == (3, 0, 3)
+    assert rk.level_bounds == ck.level_bounds
+    rk.verify_checksums()
+    rk.validate_for(4, 1, 6)
+
+
+def test_remap_rejects_bad_slots_and_corruption():
+    ck = _small_ck()
+    u2 = np.zeros(5, np.int32)
+    with pytest.raises(CheckpointError, match="slots"):
+        ck.remap(1, 6, u2, u2, u2)    # 5 != p' * cap' = 6
+    ck.settled[0] = False             # corrupt, then try to remap
+    u6 = np.zeros(6, np.int32)
+    with pytest.raises(CheckpointError, match="checksum"):
+        ck.remap(1, 6, u6, u6, u6)
+
+
+def test_latest_certified():
+    assert latest_certified([]) is None
+    a, b = _small_ck(round_index=2), _small_ck(round_index=4)
+    assert latest_certified([a, b]) is b
+
+
+# -- interrupted == uninterrupted, bit for bit (subprocess) -----------------
+
+_GRAPH = """
+from jax.sharding import Mesh
+from repro.core.distributed import build_dist_graph
+
+rng = np.random.default_rng({seed})
+n, m = 256, 1024
+u = rng.integers(0, n, m).astype(np.int32)
+v = rng.integers(0, n, m).astype(np.int32)
+keep = u != v
+u, v = u[keep], v[keep]
+w = rng.random(u.size).astype(np.float32)
+mesh = Mesh(np.array(jax.devices()), ("data",))
+g, cap = build_dist_graph(u, v, w, n, 8)
+"""
+
+CKPT_RESUME = _GRAPH.format(seed=0) + """
+from repro.core.distributed_sharded import (
+    distributed_sharded_msf, execute_plan, execute_plan_batched,
+    plan_sharded_msf)
+
+# host driver: checkpointing changes nothing, resume from every
+# checkpoint is bit-identical (mask, weight, count, labels, rounds)
+base = distributed_sharded_msf(g, n, mesh)
+cks = []
+out = distributed_sharded_msf(g, n, mesh, ckpt_every=2, ckpt_out=cks)
+assert np.array_equal(np.asarray(out[0]), np.asarray(base[0]))
+assert cks, "no certified checkpoints at cadence 2"
+for ck in cks:
+    res = distributed_sharded_msf(g, n, mesh, resume_from=ck)
+    assert np.array_equal(np.asarray(res[0]), np.asarray(base[0])), ck
+    assert float(res[1]) == float(base[1])
+    assert int(res[2]) == int(base[2])
+    assert np.array_equal(np.asarray(res[3]), np.asarray(base[3]))
+    assert int(res[5].rounds) == int(base[5].rounds)
+
+# filter_boruvka drives level windows through the checkpoint too
+base_f = distributed_sharded_msf(g, n, mesh, algorithm="filter_boruvka")
+cks_f = []
+distributed_sharded_msf(g, n, mesh, algorithm="filter_boruvka",
+                        ckpt_every=2, ckpt_out=cks_f)
+assert cks_f
+for ck in cks_f:
+    res = distributed_sharded_msf(g, n, mesh, algorithm="filter_boruvka",
+                                  resume_from=ck)
+    assert np.array_equal(np.asarray(res[0]), np.asarray(base_f[0])), ck
+
+# the planned executor segments at cadence cuts; resume skips ahead
+plan = plan_sharded_msf(g, n, mesh)
+pbase = execute_plan(g, n, mesh, plan, replan=False)
+cks_p = []
+pout = execute_plan(g, n, mesh, plan, replan=False, ckpt_every=2,
+                    ckpt_out=cks_p)
+assert np.array_equal(np.asarray(pout[0]), np.asarray(pbase[0]))
+assert float(pout[1]) == float(pbase[1])
+assert cks_p and all(c.plan_pos is not None for c in cks_p)
+for ck in cks_p:
+    res = execute_plan(g, n, mesh, plan, replan=False, resume_from=ck)
+    assert np.array_equal(np.asarray(res[0]), np.asarray(pbase[0])), ck
+    assert float(res[1]) == float(pbase[1])
+    assert np.array_equal(np.asarray(res[3]), np.asarray(pbase[3]))
+
+# a driver checkpoint (plan_pos=None) cannot drive plan skip-ahead
+try:
+    execute_plan(g, n, mesh, plan, replan=False, resume_from=cks[0])
+    raise SystemExit("driver checkpoint accepted for plan skip-ahead")
+except RuntimeError as e:
+    assert "plan" in str(e)
+
+# checkpointing through the non-host paths is a loud ValueError
+try:
+    distributed_sharded_msf(g, n, mesh, plan=plan, ckpt_every=2,
+                            ckpt_out=[])
+    raise SystemExit("plan-path checkpointing accepted")
+except ValueError as e:
+    assert "execute_plan" in str(e)
+try:
+    distributed_sharded_msf(g, n, mesh, shrink_capacities=False,
+                            ckpt_every=2, ckpt_out=[])
+    raise SystemExit("fused-path checkpointing accepted")
+except ValueError as e:
+    assert "shrinking" in str(e)
+
+# batched skip-ahead: both batchmates resume at the shared plan_pos and
+# land bit-identical to the full batched run
+g2, _ = build_dist_graph(u, v, (w * 1.7 + 0.1).astype(np.float32), n, 8,
+                         cap=cap)
+full, bad = execute_plan_batched([g, g2], n, mesh, plan, replan=False)
+cks_p2 = []
+execute_plan(g2, n, mesh, plan, replan=False, ckpt_every=2,
+             ckpt_out=cks_p2)
+pos = cks_p[0].plan_pos
+ck1 = next(c for c in cks_p if c.plan_pos == pos)
+ck2 = next(c for c in cks_p2 if c.plan_pos == pos)
+res_b, bad_b = execute_plan_batched([g, g2], n, mesh, plan,
+                                    replan=False, resume_from=[ck1, ck2])
+assert bad_b == bad
+for i in range(2):
+    assert np.array_equal(np.asarray(res_b[i][0]),
+                          np.asarray(full[i][0])), i
+    assert float(res_b[i][1]) == float(full[i][1])
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_checkpoint_resume_bit_identity_multidevice():
+    assert run_multidevice(CKPT_RESUME, ndev=8,
+                           timeout=900).strip().endswith("OK")
+
+
+ABORT_RESUME = _GRAPH.format(seed=5) + """
+from repro.comm import faults
+from repro.comm.faults import FaultPlan, FaultSpec, ShardAbort
+from repro.core.distributed_sharded import distributed_sharded_msf
+
+base = distributed_sharded_msf(g, n, mesh)
+
+# kill the exchange at round 3 — one round past the cadence, so a
+# certified checkpoint exists when the shard dies
+plan = FaultPlan(seed=0, specs=(
+    FaultSpec(kind="abort", site="minedges", rounds=(3,)),))
+cks = []
+try:
+    with faults.inject(plan):
+        distributed_sharded_msf(g, n, mesh, ckpt_every=2, ckpt_out=cks)
+    raise SystemExit("abort did not fire")
+except ShardAbort as e:
+    assert "minedges" in str(e) and "round 3" in str(e), e
+assert cks, "no checkpoint certified before the abort"
+ck = cks[-1]
+assert ck.round_index == 2
+
+# resume outside the injection: bit-identical, and the re-executed
+# rounds are bounded by the cadence
+res = distributed_sharded_msf(g, n, mesh, resume_from=ck)
+assert np.array_equal(np.asarray(res[0]), np.asarray(base[0]))
+assert float(res[1]) == float(base[1])
+assert int(res[5].rounds) == int(base[5].rounds)
+re_exec = 3 - 1 - ck.round_index
+assert 0 <= re_exec <= 2, re_exec
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_abort_then_resume_multidevice():
+    assert run_multidevice(ABORT_RESUME, ndev=8,
+                           timeout=900).strip().endswith("OK")
+
+
+ELASTIC = _GRAPH.format(seed=3) + """
+from repro.core.distributed_sharded import distributed_sharded_msf
+
+g8 = g
+base = distributed_sharded_msf(g8, n, mesh)
+base_eids = np.unique(np.asarray(g8.eid)[np.asarray(base[0])])
+cks = []
+distributed_sharded_msf(g8, n, mesh, ckpt_every=2, ckpt_out=cks)
+assert cks
+
+# restore every 8-shard checkpoint onto a 4-shard mesh: re-owner-map
+# the vertex state, re-partition the edges from the host store — the
+# finished forest is the exact same undirected edge set
+mesh4 = Mesh(np.array(jax.devices()[:4]), ("data",))
+g4, cap4 = build_dist_graph(u, v, w, n, 4)
+for ck in cks:
+    ck2 = ck.remap(4, cap4, np.asarray(g4.u), np.asarray(g4.v),
+                   np.asarray(g4.eid))
+    res = distributed_sharded_msf(g4, n, mesh4, resume_from=ck2)
+    eids = np.unique(np.asarray(g4.eid)[np.asarray(res[0])])
+    assert np.array_equal(eids, base_eids), ck
+    assert int(res[4]) == 0
+
+# filter_boruvka's frozen windows survive an 8 -> 2 shrink too
+mesh2 = Mesh(np.array(jax.devices()[:2]), ("data",))
+basef = distributed_sharded_msf(g8, n, mesh, algorithm="filter_boruvka")
+basef_eids = np.unique(np.asarray(g8.eid)[np.asarray(basef[0])])
+cksf = []
+distributed_sharded_msf(g8, n, mesh, algorithm="filter_boruvka",
+                        ckpt_every=2, ckpt_out=cksf)
+g2c, cap2c = build_dist_graph(u, v, w, n, 2)
+for ck in cksf:
+    ck2 = ck.remap(2, cap2c, np.asarray(g2c.u), np.asarray(g2c.v),
+                   np.asarray(g2c.eid))
+    res = distributed_sharded_msf(g2c, n, mesh2,
+                                  algorithm="filter_boruvka",
+                                  resume_from=ck2)
+    eids = np.unique(np.asarray(g2c.eid)[np.asarray(res[0])])
+    assert np.array_equal(eids, basef_eids), ck
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_elastic_restore_multidevice():
+    assert run_multidevice(ELASTIC, ndev=8,
+                           timeout=900).strip().endswith("OK")

@@ -208,6 +208,152 @@ def test_gateway_multidevice():
     assert "OK" in out
 
 
+# -- batchmate failure attribution + rung deadlines (subprocess) -----------
+
+BATCH_ATTRIBUTION = """
+from jax.sharding import Mesh
+from repro.core import oracle
+from repro.core.distributed import build_dist_graph
+from repro.core.distributed_sharded import (execute_plan_batched,
+                                            plan_sharded_msf)
+
+p = 8
+n = 256
+mesh = Mesh(np.array(jax.devices()), ("data",))
+rng = np.random.default_rng(0)
+
+# two same-shape batchmates, one good, one "corrupt" for the measured
+# plan: a star converges in one round, a path of the same n and m
+# needs ~log2 n — the plan strictly fits only the star lane
+su = np.zeros(n - 1, np.int32)
+sv = np.arange(1, n, dtype=np.int32)
+pu = np.arange(0, n - 1, dtype=np.int32)
+pv = np.arange(1, n, dtype=np.int32)
+w1 = rng.uniform(1, 10, n - 1).astype(np.float32)
+w2 = rng.uniform(1, 10, n - 1).astype(np.float32)
+cap = max(1, -(-2 * (n - 1) // p))
+star = build_dist_graph(su, sv, w1, n, p, cap=cap)[0]
+path = build_dist_graph(pu, pv, w2, n, p, cap=cap)[0]
+km_s, kw_s = oracle.kruskal(su, sv, w1, n)
+km_p, kw_p = oracle.kruskal(pu, pv, w2, n)
+plan = plan_sharded_msf(star, n, mesh)
+
+def eids(g, res):
+    return np.unique(np.asarray(g.eid)[np.asarray(res[0])])
+
+# defer mode: ONLY the corrupt lane is flagged (None result); the good
+# batchmate's forest is untouched — oracle-bit-identical
+res, flagged = execute_plan_batched([star, path], n, mesh, plan,
+                                    replan="defer", verify=True)
+assert flagged == (1,), flagged
+assert res[1] is None
+assert np.array_equal(eids(star, res[0]), np.flatnonzero(km_s))
+assert abs(float(res[0][1]) - kw_s) < 1e-3 * kw_s
+assert int(res[0][4]) == 0
+
+# lane order is attribution, not position: swap the batch
+res2, flagged2 = execute_plan_batched([path, star], n, mesh, plan,
+                                      replan="defer", verify=True)
+assert flagged2 == (0,), flagged2
+assert res2[0] is None
+assert np.array_equal(eids(star, res2[1]), np.flatnonzero(km_s))
+
+# strict mode raises naming exactly the corrupted index
+try:
+    execute_plan_batched([star, path], n, mesh, plan, replan=False,
+                         verify=True)
+    raise SystemExit("misfit lane was silent under replan=False")
+except RuntimeError as e:
+    assert "batch requests [1]" in str(e), e
+
+# serving mode: the corrupt lane is still attributed in ``flagged``
+# but comes back re-solved by its own measured pass — both lanes end
+# oracle-exact, the good lane from the shared batched dispatch
+res3, flagged3 = execute_plan_batched([star, path], n, mesh, plan,
+                                      replan=True, verify=True)
+assert flagged3 == (1,), flagged3
+assert np.array_equal(eids(star, res3[0]), np.flatnonzero(km_s))
+assert np.array_equal(eids(path, res3[1]), np.flatnonzero(km_p))
+assert abs(float(res3[1][1]) - kw_p) < 1e-3 * kw_p
+assert int(res3[1][4]) == 0
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_batchmate_failure_attribution_multidevice():
+    assert run_multidevice(BATCH_ATTRIBUTION, ndev=8,
+                           timeout=900).strip().endswith("OK")
+
+
+RUNG_DEADLINE = """
+from jax.sharding import Mesh
+from repro.core import oracle
+from repro.serve.msf_gateway import MSFGateway, MSFRequest
+
+p = 8
+n = 256
+mesh = Mesh(np.array(jax.devices()), ("data",))
+
+def star(seed, rid, deadline=None):
+    rng = np.random.default_rng(seed)
+    return MSFRequest(rid=rid, family="syn", u=np.zeros(n - 1, np.int32),
+                      v=np.arange(1, n, dtype=np.int32),
+                      w=rng.uniform(1, 10, n - 1).astype(np.float32),
+                      n=n, deadline=deadline)
+
+def path(seed, rid, deadline=None):
+    rng = np.random.default_rng(seed)
+    return MSFRequest(rid=rid, family="syn",
+                      u=np.arange(0, n - 1, dtype=np.int32),
+                      v=np.arange(1, n, dtype=np.int32),
+                      w=rng.uniform(1, 10, n - 1).astype(np.float32),
+                      n=n, deadline=deadline)
+
+# regression (ISSUE 9 bugfix): the entry sweep runs before the batched
+# dispatch, so a request that was inside its deadline at step entry
+# can be expired by the time its retry rung dispatches.  Cold gateway:
+# the star heads the batch, the plan is measured on it (seconds of
+# compile on this backend — far past the path's 1s budget), the path
+# lane flags, and the rung's re-check must reject instead of serving
+# late.  Pre-fix, the rung dispatched a strict replan and served a
+# result past the deadline.
+gw = MSFGateway(mesh, batch_slots=4, max_retries_per_request=3,
+                breaker_threshold=99, min_samples=99)
+s0 = star(0, 0)
+p0 = path(1, 1, deadline=1.0)
+gw.submit(s0)
+gw.submit(p0)
+gw.run()
+assert s0.done and s0.served_via == "batched"
+km, kw = oracle.kruskal(s0.u, s0.v, s0.w, n)
+assert np.array_equal(s0.edges, np.flatnonzero(km))
+assert p0.done and p0.served_via == "rejected", vars(p0)
+assert "before retry dispatch" in p0.error, p0.error
+assert gw.stats.deadline_missed == 1 and gw.stats.rejected == 1
+assert gw.stats.retried == 1 and not gw.queue
+# the rung rejection never consumed a replan or resumed a checkpoint
+assert gw.stats.replans == 0 and gw.stats.resumed == 0
+
+# same traffic with budget to spare serves via the ladder as before —
+# the re-check only fires for genuinely expired requests
+p1 = path(2, 2, deadline=600.0)
+gw.submit(p1)
+gw.run()
+assert p1.done and p1.served_via == "replanned", vars(p1)
+km, kw = oracle.kruskal(p1.u, p1.v, p1.w, n)
+assert np.array_equal(p1.edges, np.flatnonzero(km))
+assert gw.stats.deadline_missed == 1, vars(gw.stats)
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_rung_deadline_recheck_multidevice():
+    assert run_multidevice(RUNG_DEADLINE, ndev=8,
+                           timeout=900).strip().endswith("OK")
+
+
 # -- synthetic-plan calibration vs measured plans (subprocess) -------------
 
 CALIBRATION = """
