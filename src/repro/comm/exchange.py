@@ -18,6 +18,14 @@ Primitives:
     every shard whose bit is set in ``dest_mask[i]`` (the ghost-vertex
     dirty-label push of the sharded MST engine: an owner ships a changed
     label to every subscriber shard in one exchange, no request leg).
+  * ``scatter_updates_grid`` — the two-level multicast (Section VI-A
+    applied to the push): subscriptions are a *pair* of per-axis
+    bitmasks on a (row, col) mesh, and each item travels two hops —
+    along the owner's row to one deputy per subscribing column, then
+    down each deputy's column to the subscribing rows — so the copy
+    matrix shrinks from [L, p] to [L, sqrt(p)] per hop and the fan-out
+    from O(p) to O(sqrt(p)), lifting the flat primitive's 31-shard cap
+    to 31 x 31 = 961.
 
 Used by: distributed MST (ghost-label exchange, redistribution) and the
 MoE layers (token->expert dispatch) — one primitive, two workloads.
@@ -66,12 +74,20 @@ class ExchangeStats(NamedTuple):
         Unit: bytes.  float32 because int32 overflows at benchmark size.
       * ``slots`` — float32 count of **buffer slots** allocated across
         calls: one logical exchange (or reply) adds ``p * capacity``
-        once, with no payload-width or hop multiplier.  This is the
-        capacity-per-call plumbing: ``slots`` divided by logical
-        exchanges recovers the average capacity a solve actually used,
-        which is how the shrinking-capacity schedule is audited without
-        re-deriving capacities from the code.  Unit: slots (rows), not
-        bytes.  Conservation law (asserted in tests/test_comm.py): one
+        per hop, with no payload-width multiplier.  Request/reply legs
+        ship one pre-packed buffer end to end, so their hop count is
+        always 1 logical allocation (``routed_exchange`` books
+        ``p * capacity`` once regardless of schedule); the *multicast*
+        primitives re-admit items at every hop — ``scatter_updates``
+        books ``p * capacity * hops`` and ``scatter_updates_grid``
+        books its two legs distinctly (``C * cap_row + R * cap_col``),
+        which is exactly the O(sqrt(p))-vs-O(p) fan-out the grid push
+        exists to shrink.  This is the capacity-per-call plumbing:
+        ``slots`` divided by logical exchanges recovers the average
+        capacity a solve actually used, which is how the
+        shrinking-capacity schedule is audited without re-deriving
+        capacities from the code.  Unit: slots (rows), not bytes.
+        Conservation law (asserted in tests/test_comm.py): one
         request/reply lookup contributes exactly ``2 * p * capacity`` —
         never more; the primitives below only ever *carry* these fields
         through (``_replace``), so a caller cannot double-book a call by
@@ -285,6 +301,28 @@ def _mask_to_copies(dest_mask: jax.Array, valid: jax.Array,
     return valid[:, None] & (((dest_mask[:, None] >> lanes) & 1) > 0)
 
 
+def _axis_masks_to_copies(row_mask: jax.Array, col_mask: jax.Array,
+                          valid: jax.Array, r: int, c: int
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Per-axis sibling of ``_mask_to_copies`` for the two-level grid
+    multicast: expand a *pair* of per-axis int32 subscription bitmasks
+    into the two per-hop copy matrices.
+
+    Returns ``(row_copies [L, r], col_copies [L, c])``: copy (i, rr)
+    exists iff item ``i`` is valid and bit ``rr`` of ``row_mask[i]`` is
+    set (the deputy's second hop down its column), copy (i, cc) likewise
+    from ``col_mask`` (the owner's first hop along its row).  The
+    delivered set is the outer product ``row_copies & col_copies`` —
+    every device (rr, cc) with both bits set — which covers up to
+    31 x 31 = 961 shards from two sign-bit-safe int32 masks, while each
+    hop's transient stays [L, <=31] instead of the flat [L, p].
+    Pure bit arithmetic (meshless-testable, tests/test_comm.py); both
+    axes share the flat helper's bit-30 width contract.
+    """
+    return (_mask_to_copies(row_mask, valid, r),
+            _mask_to_copies(col_mask, valid, c))
+
+
 class ScatterResult(NamedTuple):
     """Receive-side view of one ``scatter_updates`` multicast.  There is
     no reply leg, so no routing bookkeeping is carried — consumers apply
@@ -320,8 +358,13 @@ def scatter_updates(payload, dest_mask: jax.Array, valid: jax.Array,
     Overflow accounting matches ``routed_exchange``: copies beyond
     ``capacity`` are dropped *per destination* and counted, never
     silent.  ``stats`` accrues one logical exchange (payload leaves + 1
-    mask buffer, ``p * capacity`` slots); the ghost-specific ``pushed``
-    counter is the caller's to bump — this primitive is generic.
+    mask buffer) with the grid hop multiplier on slots as well as bytes
+    — a multicast's copies are *re-admitted* at every hop, so a
+    d-axis grid schedule allocates ``p * capacity * d`` rows, unlike
+    the request/reply legs whose pre-packed buffer ships end to end
+    (see the ``ExchangeStats.slots`` contract); the ghost-specific
+    ``pushed`` counter is the caller's to bump — this primitive is
+    generic.
     """
     names = tuple(axis_names)
     p = 1
@@ -368,11 +411,164 @@ def scatter_updates(payload, dest_mask: jax.Array, valid: jax.Array,
         stats = stats._replace(calls=stats.calls + jnp.int32(nbuf * h),
                                items=stats.items + items,
                                bytes=stats.bytes + jnp.float32(by * h),
-                               slots=stats.slots + jnp.float32(p * capacity))
+                               slots=stats.slots
+                               + jnp.float32(p * capacity * h))
         if fspecs:
             stats = stats._replace(
                 injected=stats.injected + lax.psum(inj, names))
     return ScatterResult(recv, recv_ok, ok, overflow, stats)
+
+
+def scatter_updates_grid(payload, row_mask: jax.Array,
+                         col_mask: jax.Array, valid: jax.Array,
+                         cap_row: int, cap_col: int,
+                         axis_names: Sequence[str],
+                         stats: Optional[ExchangeStats] = None,
+                         site_row: str = "", site_col: str = ""
+                         ) -> ScatterResult:
+    """Two-level grid multicast (Section VI-A applied to the push).
+
+    Delivers ``payload[i]`` to every device ``(rr, cc)`` with bit ``rr``
+    of ``row_mask[i]`` *and* bit ``cc`` of ``col_mask[i]`` set, in two
+    hops on a 2-axis ``(row, col)`` mesh:
+
+      1. the owner at ``(r0, c0)`` ships one copy per subscribing
+         column along its own row — an ``all_to_all`` over the *col*
+         axis only, ``[C, cap_row]`` buffers — to the grid deputies
+         ``(r0, cc)``, each copy carrying its ``row_mask``;
+      2. each deputy re-multicasts its received items down its column
+         to the subscribing rows — an ``all_to_all`` over the *row*
+         axis, ``[R, cap_col]`` buffers.
+
+    Per hop the copy matrix is ``[*, <=31]`` instead of the flat
+    ``[L, p]``, the per-item fan-out is O(sqrt(p)) instead of O(p), and
+    the pair of int32 masks addresses up to 961 shards — the flat
+    primitive's 31-shard sign-bit cap, lifted.  The delivered set is
+    the *outer product* of the two masks, a superset of any true
+    subscriber set whose projections they are; callers must apply
+    updates value-keyed (the ghost push rewrites table entries matching
+    the shipped old root, so an unsubscribed ``(rr, cc)`` in the cross
+    product simply matches nothing).
+
+    Overflow follows the shared exchange contract on **both** hops:
+    copies beyond ``cap_row`` per (owner, column) or beyond ``cap_col``
+    per (deputy, row) are dropped and counted, never silent.  ``stats``
+    books the two legs distinctly — hop 1 adds ``C * cap_row`` slots
+    (payload leaves + the forwarded row mask + validity), hop 2
+    ``R * cap_col`` — so the roofline cross-check sees the deputy leg's
+    real cost.  ``site_row`` / ``site_col`` label the hops separately
+    for fault injection (``ghost_push_row`` / ``ghost_push_col`` in the
+    engine).  The result's ``sent_ok`` is the hop-1 admission matrix
+    ``[L, C]`` (the owner's view; hop-2 drops are visible in
+    ``overflow`` only, like any relayed exchange).
+    """
+    names = tuple(axis_names)
+    if len(names) != 2:
+        raise ValueError(
+            f"scatter_updates_grid needs a (row, col) axis pair, got "
+            f"{names!r}")
+    row_ax, col_ax = names
+    R = compat.axis_size(row_ax)
+    C = compat.axis_size(col_ax)
+    L = valid.shape[0]
+    leaves = jax.tree.leaves(payload)
+
+    # -- hop 1: owner -> deputies along the row (exchange over col) ------
+    cap1_ok = cap_row
+    fspecs1 = faults.specs_for(site_row)
+    inj = jnp.float32(0.0)
+    pl1 = (payload, row_mask)
+    if fspecs1:
+        pl1, col_mask, valid, cap1_ok, inj = faults.apply_send_scatter(
+            fspecs1, faults.active().seed, site_row, pl1, col_mask,
+            valid, cap_row, C, names)
+    want1 = _mask_to_copies(col_mask, valid, C)          # [L, C]
+    pos1 = jnp.cumsum(want1.astype(jnp.int32), axis=0) - 1
+    ok1 = want1 & (pos1 < cap1_ok)
+    if fspecs1 and cap1_ok < cap_row:
+        inj = inj + jnp.sum((want1 & (pos1 >= cap1_ok)
+                             & (pos1 < cap_row)).astype(jnp.float32))
+    d1 = jnp.where(ok1, jnp.arange(C, dtype=jnp.int32)[None, :], C)
+    s1 = jnp.where(ok1, pos1, 0)
+
+    def scatter1(x):
+        buf = compat.vary(jnp.zeros((C, cap_row) + x.shape[1:], x.dtype),
+                          names)
+        rep = jnp.broadcast_to(x[:, None], (L, C) + x.shape[1:])
+        return buf.at[d1, s1].set(rep, mode="drop")
+
+    send1 = jax.tree.map(scatter1, pl1)
+    mask1 = compat.vary(jnp.zeros((C, cap_row), bool), names).at[
+        d1, s1].set(ok1, mode="drop")
+    hop1 = jax.tree.map(
+        lambda b: lax.all_to_all(b, col_ax, split_axis=0, concat_axis=0),
+        send1)
+    ok_r = lax.all_to_all(mask1, col_ax, split_axis=0, concat_axis=0)
+    if fspecs1:
+        ok_r, inj_r = faults.apply_recv(fspecs1, faults.active().seed,
+                                        site_row, ok_r, names)
+        inj = inj + inj_r
+    ovf1 = lax.psum(jnp.sum((want1 & ~ok1).astype(jnp.int32)), names)
+    recv_payload, rmask_r = hop1                         # [C, cap_row, ...]
+
+    # -- hop 2: deputy -> subscribers down the column (exchange over row)
+    M = C * cap_row
+    dep_valid = ok_r.reshape(-1)
+    dep_rmask = rmask_r.reshape(-1)
+    dep_payload = jax.tree.map(
+        lambda x: x.reshape((M,) + x.shape[2:]), recv_payload)
+    cap2_ok = cap_col
+    fspecs2 = faults.specs_for(site_col)
+    if fspecs2:
+        (dep_payload, dep_rmask, dep_valid, cap2_ok,
+         inj2) = faults.apply_send_scatter(
+            fspecs2, faults.active().seed, site_col, dep_payload,
+            dep_rmask, dep_valid, cap_col, R, names)
+        inj = inj + inj2
+    want2 = _mask_to_copies(dep_rmask, dep_valid, R)     # [M, R]
+    pos2 = jnp.cumsum(want2.astype(jnp.int32), axis=0) - 1
+    ok2 = want2 & (pos2 < cap2_ok)
+    if fspecs2 and cap2_ok < cap_col:
+        inj = inj + jnp.sum((want2 & (pos2 >= cap2_ok)
+                             & (pos2 < cap_col)).astype(jnp.float32))
+    d2 = jnp.where(ok2, jnp.arange(R, dtype=jnp.int32)[None, :], R)
+    s2 = jnp.where(ok2, pos2, 0)
+
+    def scatter2(x):
+        buf = compat.vary(jnp.zeros((R, cap_col) + x.shape[1:], x.dtype),
+                          names)
+        rep = jnp.broadcast_to(x[:, None], (M, R) + x.shape[1:])
+        return buf.at[d2, s2].set(rep, mode="drop")
+
+    send2 = jax.tree.map(scatter2, dep_payload)
+    mask2 = compat.vary(jnp.zeros((R, cap_col), bool), names).at[
+        d2, s2].set(ok2, mode="drop")
+    recv = jax.tree.map(
+        lambda b: lax.all_to_all(b, row_ax, split_axis=0, concat_axis=0),
+        send2)
+    recv_ok = lax.all_to_all(mask2, row_ax, split_axis=0, concat_axis=0)
+    if fspecs2:
+        recv_ok, inj_r2 = faults.apply_recv(fspecs2, faults.active().seed,
+                                            site_col, recv_ok, names)
+        inj = inj + inj_r2
+    ovf2 = lax.psum(jnp.sum((want2 & ~ok2).astype(jnp.int32)), names)
+
+    if stats is not None:
+        nbuf1 = len(leaves) + 2          # + row mask + validity mask
+        nbuf2 = len(leaves) + 1          # + validity mask
+        by = (_buffer_bytes(send1) + _buffer_bytes(mask1)
+              + _buffer_bytes(send2) + _buffer_bytes(mask2))
+        items = lax.psum(jnp.sum(ok1.astype(jnp.float32))
+                         + jnp.sum(ok2.astype(jnp.float32)), names)
+        stats = stats._replace(
+            calls=stats.calls + jnp.int32(nbuf1 + nbuf2),
+            items=stats.items + items,
+            bytes=stats.bytes + jnp.float32(by),
+            slots=stats.slots + jnp.float32(C * cap_row + R * cap_col))
+        if fspecs1 or fspecs2:
+            stats = stats._replace(
+                injected=stats.injected + lax.psum(inj, names))
+    return ScatterResult(recv, recv_ok, ok1, ovf1 + ovf2, stats)
 
 
 def request_reply(request, dest: jax.Array, valid: jax.Array,

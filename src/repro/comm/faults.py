@@ -82,6 +82,7 @@ FAULT_KINDS = ("clip", "corrupt", "shuffle_dest", "drop", "stall",
 # exchange; FaultPlan.validate rejects anything else loudly — a typo'd
 # site would otherwise inject nothing and "pass" chaos vacuously
 KNOWN_SITES = ("", "minedges", "lookup", "contract", "relabel", "push",
+               "ghost_push_row", "ghost_push_col",
                "prep", "fill", "subscribe", "verify")
 
 

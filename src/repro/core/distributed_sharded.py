@@ -166,7 +166,8 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.comm import faults
 from repro.comm.exchange import (ExchangeStats, _hops, reply,
-                                 routed_exchange, scatter_updates)
+                                 routed_exchange, scatter_updates,
+                                 scatter_updates_grid)
 from repro.core.distributed import (ESENT, CommStats, DistGraph,
                                     _doubling_iters, _weight_pivots,
                                     quantize_capacity)
@@ -176,8 +177,13 @@ from repro.kernels.segmin.ops import run_metadata
 from repro.kernels.segmin.segmin import owner_scatter_min
 
 # the ghost push encodes subscriber sets as int32 bitmasks; bit 31 is
-# the sign bit, so meshes beyond this fall back to coalesced lookups
+# the sign bit, so the *flat* push caps at 31 shards.  The two-level
+# grid push (ISSUE 10) stores one mask per mesh axis instead — 31 rows
+# x 31 columns — lifting the addressable mesh to 961 shards; beyond
+# that (or on meshes that do not factor into exactly two axes) the
+# engine falls back to coalesced lookups.
 MAX_GHOST_SHARDS = 31
+MAX_GHOST_SHARDS_GRID = MAX_GHOST_SHARDS ** 2  # 961
 
 # default checkpoint cadence (ISSUE 9): every this-many executed rounds
 # both drivers run the verify barrier and snapshot — amortized to keep
@@ -391,20 +397,26 @@ def _bit_or_scatter(mask: jax.Array, idx: jax.Array, bits: jax.Array,
 def _ghost_setup(u, v, valid, live, lab, vperm, n: int, vps: int,
                  Gu: int, Gv: int, cap_fill_u: int, cap_fill_v: int,
                  cap_sub: int, axes: Tuple[str, ...], schedule: str,
-                 stats: ExchangeStats):
+                 stats: ExchangeStats, grid_push: bool = False):
     """Build the per-shard ghost state: tables + root subscriptions.
 
     Runs once per solve, after preprocessing.  The two coalesced fills
     (one request per distinct live endpoint) are the only vertex-grained
     lookups the ghost engine ever pays; afterwards each shard sends one
     *root subscription* per distinct cached component root — the owners
-    accumulate per-owned-root subscriber bitmasks (``root_subs``), which
-    the per-round delta push keys on.  Everything is gated on ``live``
-    (``valid`` minus the preprocessing dead mask, ignoring any filter
-    window): an all-dead run can never be read again — the dead mask
-    only grows — so filling or subscribing it would only fatten the
-    push.  Returns (gstate, vidx, runs_u, overflow, stats) with
-    ``gstate = (gu, gv, root_subs)``.
+    accumulate per-owned-root subscriber bitmasks, which the per-round
+    delta push keys on.  Everything is gated on ``live`` (``valid``
+    minus the preprocessing dead mask, ignoring any filter window): an
+    all-dead run can never be read again — the dead mask only grows —
+    so filling or subscribing it would only fatten the push.
+
+    Returns (gstate, vidx, runs_u, overflow, stats) with the uniform
+    4-tuple ``gstate = (gu, gv, rs_row, rs_col)``.  In flat-push mode
+    ``rs_row`` is the single whole-mesh subscriber bitmask and
+    ``rs_col`` stays zeros; in grid mode (ISSUE 10) the subscription
+    ships the subscriber's *per-axis* bits and the owner accumulates the
+    (row mask, col mask) pair whose outer product the two-hop push
+    covers.
     """
     names = tuple(axes)
     big = jnp.int32(n)
@@ -427,29 +439,47 @@ def _ghost_setup(u, v, valid, live, lab, vperm, n: int, vps: int,
     head = jnp.concatenate([compat.vary(jnp.ones((1,), bool), names),
                             cat[1:] != cat[:-1]])
     req = head & (cat < ESENT)
-    mybit = jnp.int32(1) << lax.axis_index(names).astype(jnp.int32)
     items0 = st.items
-    ex = routed_exchange((cat, jnp.broadcast_to(mybit, cat.shape)),
-                         cat // vps, req, cap_sub, names, schedule,
-                         stats=st, site="subscribe")
-    st = ex.stats
-    # subscription maintenance rides the push counter so misses + pushed
-    # stays the honest total ghost overhead
-    st = st._replace(pushed=st.pushed + (st.items - items0))
+    zeros = compat.vary(jnp.zeros((vps,), jnp.int32), names)
     base = lax.axis_index(names) * vps
-    rvid = ex.recv[0].reshape(-1)
-    rbit = ex.recv[1].reshape(-1)
-    okr = ex.recv_ok.reshape(-1)
-    root_subs = _bit_or_scatter(
-        compat.vary(jnp.zeros((vps,), jnp.int32), names),
-        rvid - base, rbit, okr, p, names)
-    return ((gu, gv, root_subs), vidx, runs_u, o1 + o2 + ex.overflow,
-            st)
+    if grid_push:
+        row_ax, col_ax = names
+        rowbit = jnp.int32(1) << lax.axis_index(row_ax).astype(jnp.int32)
+        colbit = jnp.int32(1) << lax.axis_index(col_ax).astype(jnp.int32)
+        ex = routed_exchange((cat, jnp.broadcast_to(rowbit, cat.shape),
+                              jnp.broadcast_to(colbit, cat.shape)),
+                             cat // vps, req, cap_sub, names, schedule,
+                             stats=st, site="subscribe")
+        st = ex.stats
+        st = st._replace(pushed=st.pushed + (st.items - items0))
+        rvid = ex.recv[0].reshape(-1) - base
+        okr = ex.recv_ok.reshape(-1)
+        R = compat.axis_size(row_ax)
+        C = compat.axis_size(col_ax)
+        rs_row = _bit_or_scatter(zeros, rvid, ex.recv[1].reshape(-1),
+                                 okr, R, names)
+        rs_col = _bit_or_scatter(zeros, rvid, ex.recv[2].reshape(-1),
+                                 okr, C, names)
+    else:
+        mybit = jnp.int32(1) << lax.axis_index(names).astype(jnp.int32)
+        ex = routed_exchange((cat, jnp.broadcast_to(mybit, cat.shape)),
+                             cat // vps, req, cap_sub, names, schedule,
+                             stats=st, site="subscribe")
+        st = ex.stats
+        # subscription maintenance rides the push counter so misses +
+        # pushed stays the honest total ghost overhead
+        st = st._replace(pushed=st.pushed + (st.items - items0))
+        rs_row = _bit_or_scatter(zeros, ex.recv[0].reshape(-1) - base,
+                                 ex.recv[1].reshape(-1),
+                                 ex.recv_ok.reshape(-1), p, names)
+        rs_col = zeros
+    return ((gu, gv, rs_row, rs_col), vidx, runs_u,
+            o1 + o2 + ex.overflow, st)
 
 
 def _ghost_push(gstate, parent: jax.Array, vps: int, capacity: int,
-                axes: Tuple[str, ...], schedule: str,
-                stats: ExchangeStats):
+                cap_col: int, axes: Tuple[str, ...], schedule: str,
+                stats: ExchangeStats, grid_push: bool = False):
     """Root-delta push: invalidate-by-replacement of ghost entries.
 
     The dirty set is keyed by **component root**, not vertex: a ghost
@@ -458,11 +488,14 @@ def _ghost_push(gstate, parent: jax.Array, vps: int, capacity: int,
     shrinks geometrically with the alive-component count, unlike the
     per-vertex label churn (which stays flat while a giant component
     absorbs the graph).  Each owner multicasts ``(c, parent[c])`` to the
-    subscribers of root ``c`` (``scatter_updates``); receivers rewrite
-    every table entry whose *value* is ``c`` via one binary search per
-    entry.  Subscriptions merge along with the components: the owner
-    forwards ``root_subs[c]`` to ``owner(parent[c])``, where it ORs into
-    the surviving root's bitmask (``parent`` is fully contracted, so
+    subscribers of root ``c`` — flat ``scatter_updates``, or the
+    two-hop ``scatter_updates_grid`` when ``grid_push`` (the cross
+    product of the per-axis masks over-delivers, which is safe exactly
+    because receivers rewrite table entries whose *value* is ``c`` via
+    one binary search per entry: no entry valued ``c`` → no-op).
+    Subscriptions merge along with the components: the owner forwards
+    the mask(s) of ``c`` to ``owner(parent[c])``, where they OR into
+    the surviving root's mask(s) (``parent`` is fully contracted, so
     forwards always target final roots, never chain).  Overflow follows
     the exchange contract — counted, never silent; a dropped copy would
     leave a stale ghost entry, so results are only trusted at overflow
@@ -472,24 +505,47 @@ def _ghost_push(gstate, parent: jax.Array, vps: int, capacity: int,
     p = 1
     for a in names:
         p *= compat.axis_size(a)
-    gu, gv, root_subs = gstate
+    gu, gv, rs_row, rs_col = gstate
     base = lax.axis_index(names) * vps
     vid = base + jnp.arange(vps, dtype=jnp.int32)
-    dirty = (parent != vid) & (root_subs != 0)
+    dirty = (parent != vid) & (rs_row != 0)
     items0 = stats.items
-    upd = scatter_updates((vid, parent), root_subs, dirty, capacity,
-                          names, schedule, stats=stats, site="push")
-    # subscriber sets follow the merge: bits of c move to owner(parent[c])
-    fx = routed_exchange((parent, root_subs), parent // vps, dirty,
-                         capacity, names, schedule, stats=upd.stats,
-                         site="push")
-    st = fx.stats
-    st = st._replace(pushed=st.pushed + (st.items - items0))
-    root_subs = jnp.where(dirty, 0, root_subs)  # merged c: no longer a root
-    root_subs = _bit_or_scatter(root_subs,
-                                fx.recv[0].reshape(-1) - base,
-                                fx.recv[1].reshape(-1),
-                                fx.recv_ok.reshape(-1), p, names)
+    if grid_push:
+        row_ax, col_ax = names
+        R = compat.axis_size(row_ax)
+        C = compat.axis_size(col_ax)
+        upd = scatter_updates_grid((vid, parent), rs_row, rs_col, dirty,
+                                   capacity, cap_col, names, stats=stats,
+                                   site_row="ghost_push_row",
+                                   site_col="ghost_push_col")
+        # subscriber masks follow the merge: both axis masks of c move
+        # to owner(parent[c]) over the plain routed (request) path
+        fx = routed_exchange((parent, rs_row, rs_col), parent // vps,
+                             dirty, capacity, names, schedule,
+                             stats=upd.stats, site="push")
+        st = fx.stats
+        st = st._replace(pushed=st.pushed + (st.items - items0))
+        rs_row = jnp.where(dirty, 0, rs_row)  # merged c: not a root now
+        rs_col = jnp.where(dirty, 0, rs_col)
+        fvid = fx.recv[0].reshape(-1) - base
+        fok = fx.recv_ok.reshape(-1)
+        rs_row = _bit_or_scatter(rs_row, fvid, fx.recv[1].reshape(-1),
+                                 fok, R, names)
+        rs_col = _bit_or_scatter(rs_col, fvid, fx.recv[2].reshape(-1),
+                                 fok, C, names)
+    else:
+        upd = scatter_updates((vid, parent), rs_row, dirty, capacity,
+                              names, schedule, stats=stats, site="push")
+        fx = routed_exchange((parent, rs_row), parent // vps, dirty,
+                             capacity, names, schedule, stats=upd.stats,
+                             site="push")
+        st = fx.stats
+        st = st._replace(pushed=st.pushed + (st.items - items0))
+        rs_row = jnp.where(dirty, 0, rs_row)  # merged c: not a root now
+        rs_row = _bit_or_scatter(rs_row,
+                                 fx.recv[0].reshape(-1) - base,
+                                 fx.recv[1].reshape(-1),
+                                 fx.recv_ok.reshape(-1), p, names)
     # apply the received (old root -> new root) pairs by value
     okp = upd.recv_ok.reshape(-1)
     rold = jnp.where(okp, upd.recv[0].reshape(-1), ESENT)
@@ -504,7 +560,7 @@ def _ghost_push(gstate, parent: jax.Array, vps: int, capacity: int,
         hit = sc[j] == gt  # unfilled entries are -1: never match
         return jnp.where(hit, sr[j], gt)
 
-    return ((apply(gu), apply(gv), root_subs),
+    return ((apply(gu), apply(gv), rs_row, rs_col),
             upd.overflow + fx.overflow, st)
 
 
@@ -940,9 +996,10 @@ def _round_body(u, v, w, eid, live0, lab, mst, dead, runs_u, runs_v,
                 vidx, gstate, settled, n: int, vps: int,
                 names: Tuple[str, ...], cap_edge: int, cap_label: int,
                 cap_lookup: int, cap_contract: int, cap_push: int,
-                schedule: str, coalesce: bool, src_only: bool,
-                adaptive: bool, ghost: bool, relabel_skip: bool,
-                pallas_minedges: bool, stats: ExchangeStats):
+                cap_push_col: int, schedule: str, coalesce: bool,
+                src_only: bool, adaptive: bool, ghost: bool,
+                relabel_skip: bool, pallas_minedges: bool,
+                grid_push: bool, stats: ExchangeStats):
     """One MINEDGES → CONTRACT → RELABEL round over 1D-sharded labels.
 
     Shared verbatim by the fused while_loop engine (flat capacities,
@@ -1046,7 +1103,8 @@ def _round_body(u, v, w, eid, live0, lab, mst, dead, runs_u, runs_v,
     o6 = jnp.int32(0)
     if ghost:
         gstate, o6, st = _ghost_push(gstate, parent, vps, cap_push,
-                                     names, schedule, st)
+                                     cap_push_col, names, schedule, st,
+                                     grid_push)
     go = lax.psum(jnp.sum(has.astype(jnp.int32)), names) > 0
     return (lab, mst, dead, gstate, settled, go,
             o1 + o2 + o3 + o4 + o5 + o6, st)
@@ -1056,11 +1114,11 @@ def _sharded_rounds(u, v, w, eid, valid, lab, mst, dead, gstate, vidx,
                     runs_u, runs_v, n: int, vps: int,
                     axes: Tuple[str, ...], active: Optional[jax.Array],
                     max_rounds: int, cap_edge: int, cap_label: int,
-                    cap_lookup: int, cap_push: int, overflow,
-                    stats: ExchangeStats, rounds, schedule: str,
-                    coalesce: bool, src_only: bool, adaptive: bool,
-                    ghost: bool, relabel_skip: bool,
-                    pallas_minedges: bool):
+                    cap_lookup: int, cap_push: int, cap_push_col: int,
+                    overflow, stats: ExchangeStats, rounds,
+                    schedule: str, coalesce: bool, src_only: bool,
+                    adaptive: bool, ghost: bool, relabel_skip: bool,
+                    pallas_minedges: bool, grid_push: bool):
     """Borůvka rounds with 1D-sharded labels (fused while_loop, flat caps).
 
     ``active`` optionally restricts the edge set (the filter levels);
@@ -1069,41 +1127,44 @@ def _sharded_rounds(u, v, w, eid, valid, lab, mst, dead, gstate, vidx,
     — the tables track the *total* label vector, so filter levels reuse
     them.  ``settled`` is per-level: a new weight window revives edges,
     so a component that chose nothing last level may choose again.  The
-    loop carry is (lab [vps], mst [cap], dead [cap], gu, gv,
-    settled [vps], go, round, overflow, stats).
+    loop carry is (lab [vps], mst [cap], dead [cap], gu, gv, rs_row,
+    rs_col, settled [vps], go, round, overflow, stats).
     """
     names = tuple(axes)
     live0 = valid if active is None else (valid & active)
     settled0 = compat.vary(jnp.zeros((vps,), bool), names)
     if ghost:
-        gu0, gv0, rs0 = gstate
+        gu0, gv0, rs0, rsc0 = gstate
     else:
         # 1-element placeholders keep one carry structure for both modes
-        gu0 = gv0 = rs0 = compat.vary(jnp.zeros((1,), jnp.int32), names)
+        gu0 = gv0 = rs0 = rsc0 = compat.vary(
+            jnp.zeros((1,), jnp.int32), names)
 
     def round_(state):
-        lab, mst, dead, gu, gv, rsubs, settled, _, r, ovf, st = state
-        gs = (gu, gv, rsubs) if ghost else None
+        (lab, mst, dead, gu, gv, rsubs, rsubc, settled, _, r, ovf,
+         st) = state
+        gs = (gu, gv, rsubs, rsubc) if ghost else None
         lab, mst, dead, gs, settled, go, o, st = _round_body(
             u, v, w, eid, live0, lab, mst, dead, runs_u, runs_v, vidx,
             gs, settled, n, vps, names, cap_edge, cap_label, cap_lookup,
-            cap_label, cap_push, schedule, coalesce, src_only, adaptive,
-            ghost, relabel_skip, pallas_minedges, st)
+            cap_label, cap_push, cap_push_col, schedule, coalesce,
+            src_only, adaptive, ghost, relabel_skip, pallas_minedges,
+            grid_push, st)
         if ghost:
-            gu, gv, rsubs = gs
-        return (lab, mst, dead, gu, gv, rsubs, settled, go, r + 1,
-                ovf + o, st)
+            gu, gv, rsubs, rsubc = gs
+        return (lab, mst, dead, gu, gv, rsubs, rsubc, settled, go,
+                r + 1, ovf + o, st)
 
     def cond(state):
-        return state[7] & (state[8] < max_rounds)
+        return state[8] & (state[9] < max_rounds)
 
-    (lab, mst, dead, gu, gv, rsubs, _, _, r, overflow,
+    (lab, mst, dead, gu, gv, rsubs, rsubc, _, _, r, overflow,
      stats) = lax.while_loop(
         cond, round_,
-        (lab, mst, dead, gu0, gv0, rs0, settled0, jnp.array(True),
+        (lab, mst, dead, gu0, gv0, rs0, rsc0, settled0, jnp.array(True),
          jnp.int32(0), overflow, stats))
     if ghost:
-        gstate = (gu, gv, rsubs)
+        gstate = (gu, gv, rsubs, rsubc)
     return lab, mst, dead, gstate, overflow, stats, rounds + r
 
 
@@ -1115,11 +1176,11 @@ def _sharded_shard_fn(u, v, w, eid, n: int, vps: int,
                       axes: Tuple[str, ...], algorithm: str,
                       num_levels: int, max_rounds: Optional[int],
                       cap_edge: int, cap_label: int, cap_lookup: int,
-                      cap_push: int, schedule: str,
+                      cap_push: int, cap_push_col: int, schedule: str,
                       local_preprocessing: bool, coalesce: bool,
                       src_only: bool, adaptive: bool, ghost: bool,
                       relabel_skip: bool, vsorted: bool,
-                      pallas_minedges: bool):
+                      pallas_minedges: bool, grid_push: bool):
     names = tuple(axes)
     valid = jnp.isfinite(w)
     base = lax.axis_index(names) * vps
@@ -1149,7 +1210,8 @@ def _sharded_shard_fn(u, v, w, eid, n: int, vps: int,
         # entry per slot); the shrinking driver sizes them host-exactly
         gstate, vidx, runs_u, ovf, stats = _ghost_setup(
             u, v, valid, valid & ~dead, lab, None, n, vps, cap, cap,
-            cap_lookup, cap_lookup, cap_label, names, schedule, stats)
+            cap_lookup, cap_lookup, cap_label, names, schedule, stats,
+            grid_push)
         overflow += ovf
     else:
         gstate = None
@@ -1161,10 +1223,11 @@ def _sharded_shard_fn(u, v, w, eid, n: int, vps: int,
     common = dict(n=n, vps=vps, axes=names, max_rounds=mr,
                   cap_edge=cap_edge, cap_label=cap_label,
                   cap_lookup=cap_lookup, cap_push=cap_push,
+                  cap_push_col=cap_push_col,
                   schedule=schedule, coalesce=coalesce, src_only=src_only,
                   adaptive=adaptive, ghost=ghost,
                   relabel_skip=relabel_skip,
-                  pallas_minedges=pallas_minedges)
+                  pallas_minedges=pallas_minedges, grid_push=grid_push)
     if algorithm == "boruvka":
         lab, mst, dead, gstate, overflow, stats, rounds = _sharded_rounds(
             u, v, w, eid, valid, lab, mst, dead, gstate, vidx, runs_u,
@@ -1199,20 +1262,21 @@ def _build_sharded_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
                       axes: Tuple[str, ...], algorithm: str,
                       num_levels: int, max_rounds: Optional[int],
                       cap_edge: int, cap_label: int, cap_lookup: int,
-                      cap_push: int, schedule: str,
+                      cap_push: int, cap_push_col: int, schedule: str,
                       local_preprocessing: bool, coalesce: bool,
                       src_only: bool, adaptive: bool, ghost: bool,
                       relabel_skip: bool, vsorted: bool,
-                      pallas_minedges: bool):
+                      pallas_minedges: bool, grid_push: bool):
     fn = partial(_sharded_shard_fn, n=n, vps=vps, axes=axes,
                  algorithm=algorithm, num_levels=num_levels,
                  max_rounds=max_rounds, cap_edge=cap_edge,
                  cap_label=cap_label, cap_lookup=cap_lookup,
-                 cap_push=cap_push, schedule=schedule,
+                 cap_push=cap_push, cap_push_col=cap_push_col,
+                 schedule=schedule,
                  local_preprocessing=local_preprocessing,
                  coalesce=coalesce, src_only=src_only, adaptive=adaptive,
                  ghost=ghost, relabel_skip=relabel_skip, vsorted=vsorted,
-                 pallas_minedges=pallas_minedges)
+                 pallas_minedges=pallas_minedges, grid_push=grid_push)
     spec = P(axes)
     return jax.jit(compat.shard_map(
         fn, mesh=mesh,
@@ -1257,39 +1321,42 @@ def _build_sharded_prep_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
 def _ghost_setup_shard_fn(u, v, w, dead, vperm, lab, n: int, vps: int,
                           Gu: int, Gv: int, cap_fill_u: int,
                           cap_fill_v: int, cap_sub: int,
-                          axes: Tuple[str, ...], schedule: str):
+                          axes: Tuple[str, ...], schedule: str,
+                          grid_push: bool):
     valid = jnp.isfinite(w)
     gstate, _, _, ovf, st = _ghost_setup(
         u, v, valid, valid & ~dead, lab, vperm, n, vps, Gu, Gv,
         cap_fill_u, cap_fill_v, cap_sub, tuple(axes), schedule,
-        ExchangeStats.zeros())
-    gu, gv, root_subs = gstate
-    return (gu, gv, root_subs, ovf) + _stat_leaves(st)
+        ExchangeStats.zeros(), grid_push)
+    gu, gv, rs_row, rs_col = gstate
+    return (gu, gv, rs_row, rs_col, ovf) + _stat_leaves(st)
 
 
 @functools.lru_cache(maxsize=64)
 def _build_ghost_setup_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
                           axes: Tuple[str, ...], Gu: int, Gv: int,
                           cap_fill_u: int, cap_fill_v: int, cap_sub: int,
-                          schedule: str):
+                          schedule: str, grid_push: bool):
     fn = partial(_ghost_setup_shard_fn, n=n, vps=vps, Gu=Gu, Gv=Gv,
                  cap_fill_u=cap_fill_u, cap_fill_v=cap_fill_v,
-                 cap_sub=cap_sub, axes=axes, schedule=schedule)
+                 cap_sub=cap_sub, axes=axes, schedule=schedule,
+                 grid_push=grid_push)
     spec = P(axes)
     return jax.jit(compat.shard_map(
         fn, mesh=mesh, in_specs=(spec,) * 6,
-        out_specs=(spec, spec, spec) + (P(),) * (1 + _STAT_FIELDS)))
+        out_specs=(spec, spec, spec, spec) + (P(),) * (1 + _STAT_FIELDS)))
 
 
 def _sharded_round_shard_fn(u, v, w, eid, vperm, lab, mst, dead, gu, gv,
-                            root_subs, settled, lo, hi, n: int, vps: int,
-                            axes: Tuple[str, ...], cap_edge: int,
-                            cap_label: int, cap_lookup: int,
-                            cap_contract: int, cap_push: int,
+                            rs_row, rs_col, settled, lo, hi, n: int,
+                            vps: int, axes: Tuple[str, ...],
+                            cap_edge: int, cap_label: int,
+                            cap_lookup: int, cap_contract: int,
+                            cap_push: int, cap_push_col: int,
                             schedule: str, coalesce: bool,
                             src_only: bool, adaptive: bool, ghost: bool,
                             relabel_skip: bool, vsorted: bool,
-                            pallas_minedges: bool):
+                            pallas_minedges: bool, grid_push: bool):
     names = tuple(axes)
     valid = jnp.isfinite(w)
     live0 = valid & (w > compat.vary(lo, names)) \
@@ -1298,15 +1365,16 @@ def _sharded_round_shard_fn(u, v, w, eid, vperm, lab, mst, dead, gu, gv,
     vidx = _build_v_index(v, valid, n, names, perm=vperm) \
         if ((coalesce and vsorted) or ghost) else None
     runs_v = run_metadata(v) if (coalesce and not vsorted) else None
-    gstate = (gu, gv, root_subs) if ghost else None
+    gstate = (gu, gv, rs_row, rs_col) if ghost else None
     lab, mst, dead, gstate, settled, go, ovf, st = _round_body(
         u, v, w, eid, live0, lab, mst, dead, runs_u, runs_v, vidx,
         gstate, settled, n, vps, names, cap_edge, cap_label, cap_lookup,
-        cap_contract, cap_push, schedule, coalesce, src_only, adaptive,
-        ghost, relabel_skip, pallas_minedges, ExchangeStats.zeros())
+        cap_contract, cap_push, cap_push_col, schedule, coalesce,
+        src_only, adaptive, ghost, relabel_skip, pallas_minedges,
+        grid_push, ExchangeStats.zeros())
     if ghost:
-        gu, gv, root_subs = gstate
-    return (lab, mst, dead, gu, gv, root_subs, settled, go,
+        gu, gv, rs_row, rs_col = gstate
+    return (lab, mst, dead, gu, gv, rs_row, rs_col, settled, go,
             ovf) + _stat_leaves(st)
 
 
@@ -1315,22 +1383,24 @@ def _build_sharded_round_fn(n: int, vps: int, mesh: jax.sharding.Mesh,
                             axes: Tuple[str, ...], cap_edge: int,
                             cap_label: int, cap_lookup: int,
                             cap_contract: int, cap_push: int,
-                            schedule: str, coalesce: bool,
-                            src_only: bool, adaptive: bool, ghost: bool,
+                            cap_push_col: int, schedule: str,
+                            coalesce: bool, src_only: bool,
+                            adaptive: bool, ghost: bool,
                             relabel_skip: bool, vsorted: bool,
-                            pallas_minedges: bool):
+                            pallas_minedges: bool, grid_push: bool):
     fn = partial(_sharded_round_shard_fn, n=n, vps=vps, axes=axes,
                  cap_edge=cap_edge, cap_label=cap_label,
                  cap_lookup=cap_lookup, cap_contract=cap_contract,
-                 cap_push=cap_push, schedule=schedule, coalesce=coalesce,
+                 cap_push=cap_push, cap_push_col=cap_push_col,
+                 schedule=schedule, coalesce=coalesce,
                  src_only=src_only, adaptive=adaptive, ghost=ghost,
                  relabel_skip=relabel_skip, vsorted=vsorted,
-                 pallas_minedges=pallas_minedges)
+                 pallas_minedges=pallas_minedges, grid_push=grid_push)
     spec = P(axes)
     return jax.jit(compat.shard_map(
         fn, mesh=mesh,
-        in_specs=(spec,) * 12 + (P(), P()),
-        out_specs=(spec,) * 7 + (P(),) * (2 + _STAT_FIELDS)))
+        in_specs=(spec,) * 13 + (P(), P()),
+        out_specs=(spec,) * 8 + (P(),) * (2 + _STAT_FIELDS)))
 
 
 def _host_weight_pivots(w_h: np.ndarray, valid_h: np.ndarray,
@@ -1560,6 +1630,69 @@ def _push_capacity_bound(lab_h: np.ndarray, ghosts: List[np.ndarray],
     return max(1, int(per_pair.max()), fw)
 
 
+def _push_capacity_bound_grid(lab_h: np.ndarray, ghosts: List[np.ndarray],
+                              choosing: np.ndarray, p: int, R: int,
+                              C: int, vps: int) -> Tuple[int, int]:
+    """Host-exact bounds for the two-level grid push (ISSUE 10).
+
+    Same reconstruction discipline as ``_push_capacity_bound``, but the
+    device state is now a (row mask, col mask) *pair* per owned root, so
+    the two hops have distinct shapes to bound:
+
+      * hop 1 (owner → deputy): copies per (owner shard, destination
+        column) — one per dirty root whose col mask has that column's
+        bit.  The forward leg (merged masks to the surviving root's
+        owner) shares ``cap_row``, so its per-source row count folds in.
+      * hop 2 (deputy → subscriber): copies per (deputy device,
+        destination row) — a deputy at (ri, cc) relays exactly the dirty
+        roots whose owner sits in row ri, whose col mask contains cc,
+        and whose row mask contains the destination row.
+
+    Over-delivery is part of the contract: the bounds count the *cross
+    product* of the per-axis masks, exactly what the device ships.
+    Returns ``(bound_row, bound_col)``, each >= 1.
+    """
+    nv = p * vps
+    row_mask = np.zeros(nv, np.int64)
+    col_mask = np.zeros(nv, np.int64)
+    for s, gh in enumerate(ghosts):
+        if gh.size == 0:
+            continue
+        roots = np.unique(lab_h[gh])
+        roots = roots[choosing[roots]]
+        if roots.size == 0:
+            continue
+        row_mask[roots] |= np.int64(1) << (s // C)
+        col_mask[roots] |= np.int64(1) << (s % C)
+    dirty = np.nonzero(row_mask)[0]
+    if dirty.size == 0:
+        return 1, 1
+    owner = dirty // vps
+    # hop 1: [owner shard, dest col] copy counts
+    b_row = 1
+    for cc in range(C):
+        has = ((col_mask[dirty] >> cc) & 1) > 0
+        if has.any():
+            b_row = max(b_row, int(np.bincount(owner[has],
+                                               minlength=p).max()))
+    # forward leg shares cap_row: rows per source shard
+    b_row = max(b_row, int(np.bincount(owner, minlength=p).max()))
+    # hop 2: [deputy device, dest row] copy counts; deputy (ri, cc)
+    # relays roots owned in row ri with col bit cc, per dest-row bit
+    b_col = 1
+    orow = owner // C
+    for rr in range(R):
+        to_rr = ((row_mask[dirty] >> rr) & 1) > 0
+        if not to_rr.any():
+            continue
+        for cc in range(C):
+            sel = to_rr & (((col_mask[dirty] >> cc) & 1) > 0)
+            if sel.any():
+                b_col = max(b_col, int(np.bincount(orow[sel],
+                                                   minlength=R).max()))
+    return b_row, b_col
+
+
 def _contract_capacity_bound(ru: np.ndarray, rv: np.ndarray,
                              alive: np.ndarray, vps: int) -> int:
     """Max per-owner count of distinct components incident to candidate
@@ -1614,6 +1747,7 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
                             round_trace: Optional[List[dict]],
                             plan_out: Optional[dict] = None,
                             pallas_minedges: bool = False,
+                            grid_push: bool = False,
                             ckpt_every: Optional[int] = None,
                             ckpt_out: Optional[List] = None,
                             resume_from: Optional[MSFCheckpoint] = None):
@@ -1656,6 +1790,11 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
     p = 1
     for a in axes:
         p *= mesh.shape[a]
+    if grid_push and len(axes) != 2:
+        raise ValueError(
+            f"grid_push needs a 2-axis (row, col) mesh, got axes={axes}")
+    R = mesh.shape[axes[0]] if len(axes) == 2 else p
+    C = mesh.shape[axes[1]] if len(axes) == 2 else 1
     vps = vertices_per_shard(n, p)
     cap = graph.cap_total // p
     mr = (math.ceil(math.log2(max(n, 2))) + 1) if max_rounds is None \
@@ -1727,14 +1866,16 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
         if plan_out is not None:
             plan_out["ghost"] = GhostPlan(Gu, Gv, qfu, qfv, qsub)
         setup = _build_ghost_setup_fn(
-            n, vps, mesh, tuple(axes), Gu, Gv, qfu, qfv, qsub, schedule)
-        gu, gv, rsubs_dev, ovf, *st = setup(graph.u, graph.v, graph.w,
-                                            dead, vperm, lab)
+            n, vps, mesh, tuple(axes), Gu, Gv, qfu, qfv, qsub, schedule,
+            grid_push)
+        gu, gv, rsubs_dev, rsubc_dev, ovf, *st = setup(
+            graph.u, graph.v, graph.w, dead, vperm, lab)
         overflow += int(ovf)
         acc += [float(x) for x in st]
     else:
         gu = gv = jnp.zeros((p,), jnp.int32)  # [1] per shard placeholder
         rsubs_dev = jnp.zeros((p,), jnp.int32)
+        rsubc_dev = jnp.zeros((p,), jnp.int32)
 
     if algorithm == "boruvka":
         windows = [(-np.inf, np.inf)]
@@ -1798,8 +1939,19 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
             choosing[np.unique(ru_h[alive_h])] = True
             ghost_round = ghost_on
             cp_r = 1
+            cpc_r = 0
+            pb_flat = 0
             if ghost_round:
-                pb = _push_capacity_bound(lab_h, ghosts, choosing, p, vps)
+                pb_flat = _push_capacity_bound(lab_h, ghosts, choosing,
+                                               p, vps)
+                if grid_push:
+                    pb, pbc = _push_capacity_bound_grid(
+                        lab_h, ghosts, choosing, p, R, C, vps)
+                    # the deputy hop's ceiling is every owned root once
+                    # per source column; C*vps always holds a rung >= pbc
+                    cpc_r = quantize_capacity(pbc, C * vps)
+                else:
+                    pb = pb_flat
                 cp_r = quantize_capacity(pb, vps) \
                     if push_capacity is None else int(push_capacity)
                 if cp_r < pb:
@@ -1810,6 +1962,7 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
                     # risking a wrong (if reported) answer
                     ghost_on = ghost_round = False
                     cp_r = 1
+                    cpc_r = 0
             coalesce_eff = coalesce or (ghost and not ghost_round)
             # after a ghost fallback the v-sorted machinery is already
             # built, so the fallback lookups always use it
@@ -1837,7 +1990,8 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
                 plan_out["rounds"].append(RoundSpec(
                     level=lvl, cap_edge=ce_r, cap_lookup=lk_r,
                     cap_contract=con_r, cap_relabel=rl_r, cap_push=cp_r,
-                    ghost=bool(ghost_round), sentinel=(bound_e == 0)))
+                    ghost=bool(ghost_round), sentinel=(bound_e == 0),
+                    cap_push_col=cpc_r))
             if bound_e == 0:
                 break  # no candidate exists: go would come back False
             # publish the 1-based round for abort-kind fault specs
@@ -1845,12 +1999,13 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
             faults.set_round(rounds + 1)
             step = _build_sharded_round_fn(
                 n, vps, mesh, tuple(axes), ce_r, rl_r, lk_r, con_r,
-                cp_r, schedule, coalesce_eff, src_only, adaptive,
-                ghost_round, relabel_skip, vsorted_eff, pallas_minedges)
-            (lab, mst, dead, gu, gv, rsubs_dev, settled_dev, go, ovf,
-             *st) = step(
+                cp_r, cpc_r, schedule, coalesce_eff, src_only, adaptive,
+                ghost_round, relabel_skip, vsorted_eff, pallas_minedges,
+                grid_push and ghost_round)
+            (lab, mst, dead, gu, gv, rsubs_dev, rsubc_dev, settled_dev,
+             go, ovf, *st) = step(
                 graph.u, graph.v, graph.w, graph.eid, vperm, lab, mst,
-                dead, gu, gv, rsubs_dev, settled_dev,
+                dead, gu, gv, rsubs_dev, rsubc_dev, settled_dev,
                 jnp.float32(lo), jnp.float32(hi))
             overflow += int(ovf)
             acc += [float(x) for x in st]
@@ -1867,7 +2022,10 @@ def _shrinking_capacity_msf(graph: DistGraph, n: int,
                     "round": rounds, "level": lvl,
                     "cap_edge": ce_r, "cap_lookup": lk_r,
                     "cap_contract": con_r, "cap_relabel": rl_r,
-                    "cap_push": cp_r, "ghost": bool(ghost_round),
+                    "cap_push": cp_r, "cap_push_col": cpc_r,
+                    "cap_push_flat": pb_flat,
+                    "grid_push": bool(grid_push and ghost_round),
+                    "ghost": bool(ghost_round),
                     "alive_bound": bound_e,
                     "minedges_buffer_bytes": minedges_buffer_bytes(
                         p, ce_r, hops, src_only),
@@ -1964,7 +2122,7 @@ def _planned_shard_fn(u, v, w, eid, n: int, vps: int,
         gstate, vidx, runs_u, ovf, stats = _ghost_setup(
             u, v, valid, valid & ~dead, lab, None, n, vps, gp.table_u,
             gp.table_v, gp.cap_fill_u, gp.cap_fill_v, gp.cap_subscribe,
-            names, plan.schedule, stats)
+            names, plan.schedule, stats, plan.grid_push)
         overflow += ovf
         # ghost-table structural guard (see docstring): excess distinct
         # runs over the planned table sizes are dropped fills — report
@@ -2003,9 +2161,10 @@ def _planned_shard_fn(u, v, w, eid, n: int, vps: int,
                 u, v, w, eid, live0, lab, mst, dead, runs_u, runs_v,
                 vidx_r, gstate, settled, n, vps, names, spec.cap_edge,
                 spec.cap_relabel, spec.cap_lookup, spec.cap_contract,
-                spec.cap_push, plan.schedule, coalesce_eff,
-                plan.src_only, plan.adaptive_doubling, spec.ghost,
-                plan.relabel_skip, plan.pallas_minedges, stats)
+                spec.cap_push, spec.cap_push_col, plan.schedule,
+                coalesce_eff, plan.src_only, plan.adaptive_doubling,
+                spec.ghost, plan.relabel_skip, plan.pallas_minedges,
+                plan.grid_push and spec.ghost, stats)
             overflow += o
         if go is not None:
             # a level still choosing edges after its planned rounds has
@@ -2112,7 +2271,7 @@ def _planned_segment_shard_fn(u, v, w, eid, lab0=None, mst0=None,
         gstate, vidx, runs_u, ovf, stats = _ghost_setup(
             u, v, valid, valid & ~dead, lab, None, n, vps, gp.table_u,
             gp.table_v, gp.cap_fill_u, gp.cap_fill_v, gp.cap_subscribe,
-            names, plan.schedule, stats)
+            names, plan.schedule, stats, plan.grid_push)
         overflow += ovf
         nu = lax.pmax(jnp.sum(runs_u[0].astype(jnp.int32)), names)
         nv = lax.pmax(jnp.sum(vidx.runs[0].astype(jnp.int32)), names)
@@ -2160,9 +2319,10 @@ def _planned_segment_shard_fn(u, v, w, eid, lab0=None, mst0=None,
                 u, v, w, eid, live0, lab, mst, dead, runs_u, runs_v,
                 vidx_r, gstate, settled, n, vps, names, spec.cap_edge,
                 spec.cap_relabel, spec.cap_lookup, spec.cap_contract,
-                spec.cap_push, plan.schedule, coalesce_eff,
-                plan.src_only, plan.adaptive_doubling, spec.ghost,
-                plan.relabel_skip, plan.pallas_minedges, stats)
+                spec.cap_push, spec.cap_push_col, plan.schedule,
+                coalesce_eff, plan.src_only, plan.adaptive_doubling,
+                spec.ghost, plan.relabel_skip, plan.pallas_minedges,
+                plan.grid_push and spec.ghost, stats)
             overflow += o
         if go is not None and idxs[-1] < stop:
             residual += go.astype(jnp.int32)
@@ -2239,6 +2399,8 @@ def _replan_with_plan(graph: DistGraph, n: int, mesh: jax.sharding.Mesh,
         coalesce=plan.coalesce, src_only=plan.src_only,
         adaptive_doubling=plan.adaptive_doubling,
         shrink_capacities=True, ghost_cache=plan.ghost is not None,
+        ghost_push=(("grid" if plan.grid_push else "flat")
+                    if plan.ghost is not None else None),
         relabel_skip=plan.relabel_skip,
         vsorted_index=plan.vsorted_index,
         pallas_minedges=plan.pallas_minedges, round_trace=round_trace,
@@ -2406,6 +2568,61 @@ def execute_plan_batched(graphs: Sequence[DistGraph], n: int,
     return results, bad
 
 
+def _ghost_push_mode(ghost_cache: bool, mode: Optional[str],
+                     axis_sizes: Tuple[int, ...],
+                     limit: Optional[int]) -> Tuple[bool, bool]:
+    """Select the ghost push implementation for this mesh (ISSUE 10).
+
+    Returns ``(ghost_on, grid)`` down the fallback ladder:
+
+      * **flat** (single whole-mesh bitmask, ``scatter_updates``) when
+        the shard count fits one int32 mask — ``p <= min(limit, 31)``;
+      * **grid** (per-axis mask pair, ``scatter_updates_grid``) when it
+        does not but the mesh factors into exactly two axes of at most
+        ``min(limit, 31)`` shards each — up to 961 shards;
+      * **off** (exact coalesced lookups) beyond both.
+
+    ``limit`` is the user's ``ghost_shard_limit`` (None → 31); it caps
+    the *per-mask* width on both rungs, which is what makes the ladder
+    testable on a small mesh (p=8 on (4, 2): limit 31 → flat, limit 7 →
+    grid, limit 1 → off).  An explicit ``mode`` ("flat" / "grid") skips
+    the auto ladder and raises loudly when the mesh cannot honor it —
+    never a silent downgrade.
+    """
+    p = 1
+    for s in axis_sizes:
+        p *= s
+    if not ghost_cache:
+        return False, False
+    lim = MAX_GHOST_SHARDS if limit is None else int(limit)
+    width = min(lim, MAX_GHOST_SHARDS)
+    if mode == "flat":
+        if p > MAX_GHOST_SHARDS:
+            raise ValueError(
+                f"ghost_push='flat' needs p <= {MAX_GHOST_SHARDS} "
+                f"(int32 subscriber bitmask), got p={p}")
+        return True, False
+    if mode == "grid":
+        if len(axis_sizes) != 2:
+            raise ValueError(
+                "ghost_push='grid' needs a 2-axis (row, col) mesh, got "
+                f"{len(axis_sizes)} axes {tuple(axis_sizes)}")
+        if max(axis_sizes) > MAX_GHOST_SHARDS:
+            raise ValueError(
+                f"ghost_push='grid' needs every mesh axis <= "
+                f"{MAX_GHOST_SHARDS}, got {tuple(axis_sizes)}")
+        return True, True
+    if mode is not None:
+        raise ValueError(
+            f"unknown ghost_push mode {mode!r}; one of None (auto), "
+            "'flat', 'grid'")
+    if p <= width:
+        return True, False
+    if len(axis_sizes) == 2 and max(axis_sizes) <= width:
+        return True, True
+    return False, False
+
+
 def _validate_plan_shape(plan: RoundPlan, n: int, p: int,
                          cap: int) -> None:
     plan.validate()
@@ -2432,6 +2649,8 @@ def plan_sharded_msf(graph: DistGraph, n: int, mesh: jax.sharding.Mesh,
                      ghost_cache: bool = True, relabel_skip: bool = True,
                      vsorted_index: bool = True,
                      pallas_minedges: bool = False,
+                     ghost_push: Optional[str] = None,
+                     ghost_shard_limit: Optional[int] = None,
                      push_capacity: Optional[int] = None,
                      round_trace: Optional[List[dict]] = None
                      ) -> RoundPlan:
@@ -2463,8 +2682,9 @@ def plan_sharded_msf(graph: DistGraph, n: int, mesh: jax.sharding.Mesh,
     if isinstance(graph.u, jax.core.Tracer):
         raise ValueError("plan_sharded_msf measures exact host bounds "
                          "and needs a concrete graph, not tracers")
-    if p > MAX_GHOST_SHARDS:
-        ghost_cache = False  # int32 subscriber bitmask limit
+    ghost_cache, grid_push = _ghost_push_mode(
+        ghost_cache, ghost_push,
+        tuple(mesh.shape[a] for a in axes), ghost_shard_limit)
     ce = int(cap if edge_capacity is None else edge_capacity)
     cl = int(vps if label_capacity is None else label_capacity)
     if lookup_capacity is None:
@@ -2479,7 +2699,7 @@ def plan_sharded_msf(graph: DistGraph, n: int, mesh: jax.sharding.Mesh,
         lk, schedule, local_preprocessing, coalesce, src_only,
         adaptive_doubling, ghost_cache, relabel_skip, vsorted_index,
         push_capacity, round_trace, plan_out=rec,
-        pallas_minedges=pallas_minedges)
+        pallas_minedges=pallas_minedges, grid_push=grid_push)
     if int(res[4]):
         raise RuntimeError(
             f"measurement pass overflowed ({int(res[4])} items): a plan "
@@ -2495,7 +2715,8 @@ def plan_sharded_msf(graph: DistGraph, n: int, mesh: jax.sharding.Mesh,
         ghost=rec.get("ghost"),
         level_bounds=tuple(rec["level_bounds"]),
         rounds=tuple(rec["rounds"]),
-        pallas_minedges=pallas_minedges).validate()
+        pallas_minedges=pallas_minedges,
+        grid_push=grid_push and rec.get("ghost") is not None).validate()
 
 
 def execute_plan(graph: DistGraph, n: int, mesh: jax.sharding.Mesh,
@@ -2746,6 +2967,7 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
                             relabel_skip: bool = True,
                             vsorted_index: bool = True,
                             pallas_minedges: bool = False,
+                            ghost_push: Optional[str] = None,
                             push_capacity: Optional[int] = None,
                             round_trace: Optional[List[dict]] = None,
                             plan: Optional[RoundPlan] = None,
@@ -2788,8 +3010,13 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
     coalesce to one request per distinct vertex), local reads every
     round, and a dirty-label push from the owners after each
     contraction — steady-state lookup traffic is O(Δlabels).
-    Automatically disabled beyond ``MAX_GHOST_SHARDS`` (int32
-    subscriber bitmask).  ``push_capacity`` pins the push exchange
+    ``ghost_push`` selects the push implementation (ISSUE 10): None
+    (default) walks the auto ladder — **flat** single-bitmask
+    ``scatter_updates`` up to ``MAX_GHOST_SHARDS`` (31) shards, then
+    the **two-level grid** ``scatter_updates_grid`` on 2-axis meshes
+    whose axes each fit a mask (up to 961 shards, O(√p) fan-out), then
+    cache off; ``"flat"``/``"grid"`` pin one rung and raise when the
+    mesh cannot honor it.  ``push_capacity`` pins the push exchange
     (diagnostics): the shrinking driver falls back to exact coalesced
     lookups when the pinned value cannot hold a round's dirty bound,
     the fused engine reports push overflow.  ``relabel_skip=True``
@@ -2820,8 +3047,9 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
     / ``core/plan.py``.
 
     ``ghost_shard_limit`` (tests/diagnostics) overrides the
-    ``MAX_GHOST_SHARDS`` threshold of the subscriber-bitmask fallback,
-    so the p > 31 auto-disable path is exercisable on small meshes.
+    ``MAX_GHOST_SHARDS`` per-mask width on both ladder rungs, so the
+    whole flat → grid → off ladder is exercisable on small meshes
+    (p=8 on a (4, 2) mesh: limit 31 → flat, 7 → grid, 1 → off).
 
     Checkpointing (ISSUE 9, shrinking-capacity path only):
     ``ckpt_every=k`` with ``ckpt_out`` (a caller list) makes the host
@@ -2856,6 +3084,10 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
                 "ckpt_every=..., resume_from=...), which segments the "
                 "unrolled program at cadence boundaries")
         _validate_plan_shape(plan, n, p, cap)
+        if plan.grid_push and len(axes) != 2:
+            raise ValueError(
+                "plan was measured with the two-level grid push and "
+                f"needs a 2-axis (row, col) mesh, got axes={axes}")
         fn = _build_planned_fn(n, vps, mesh, axes, plan)
         out = fn(graph.u, graph.v, graph.w, graph.eid)
         mask, weight, count, lab, ovf, residual, comm = out
@@ -2876,10 +3108,9 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
         # plan's frozen levers — never a silently unreliable result
         return _replan_with_plan(graph, n, mesh, axes, plan,
                                  round_trace=round_trace)
-    limit = MAX_GHOST_SHARDS if ghost_shard_limit is None \
-        else int(ghost_shard_limit)
-    if p > limit:
-        ghost_cache = False  # int32 subscriber bitmask limit
+    ghost_cache, grid_push = _ghost_push_mode(
+        ghost_cache, ghost_push,
+        tuple(mesh.shape[a] for a in axes), ghost_shard_limit)
     # is-None (not falsy) checks: an explicit 0 must be honored — it
     # yields all-overflow results, which the overflow count reports
     ce = int(cap if edge_capacity is None else edge_capacity)
@@ -2908,20 +3139,24 @@ def distributed_sharded_msf(graph: DistGraph, n: int,
             cl, lk, schedule, local_preprocessing, coalesce, src_only,
             adaptive_doubling, ghost_cache, relabel_skip, vsorted_index,
             push_capacity, round_trace, pallas_minedges=pallas_minedges,
-            ckpt_every=ckpt_every, ckpt_out=ckpt_out,
-            resume_from=resume_from)
+            grid_push=grid_push, ckpt_every=ckpt_every,
+            ckpt_out=ckpt_out, resume_from=resume_from)
     if wants_ckpt:
         raise ValueError(
             "checkpointing needs the host-driven shrinking-capacity "
             "path (shrink_capacities=True, concrete inputs): the fused "
             "single-program engine has no round boundary to snapshot at")
     cp = int(vps if push_capacity is None else push_capacity)
+    # fused path: the deputy hop has no host bound, so take the safe
+    # worst case — a deputy relays at most one full hop-1 buffer per
+    # source column (overflow still reported, like every flat capacity)
+    cpc = cp * mesh.shape[axes[1]] if grid_push else 0
     shard_fn = _build_sharded_fn(n, vps, mesh, axes, algorithm, num_levels,
-                                 max_rounds, ce, cl, lk, cp, schedule,
+                                 max_rounds, ce, cl, lk, cp, cpc, schedule,
                                  local_preprocessing, coalesce, src_only,
                                  adaptive_doubling, ghost_cache,
                                  relabel_skip, vsorted_index,
-                                 pallas_minedges)
+                                 pallas_minedges, grid_push)
     return shard_fn(graph.u, graph.v, graph.w, graph.eid)
 
 

@@ -54,6 +54,11 @@ class RoundSpec(NamedTuple):
     on the measured graph) so its ``go`` flag re-proves on every replay
     graph that the level really is finished — the in-program equivalent
     of the driver's host-side zero-bound check.
+
+    ``cap_push_col`` sizes the deputy→subscriber hop of the two-level
+    grid push (ISSUE 10) and is only meaningful when the plan's
+    ``grid_push`` lever is set; 0 (the default, and the only legal
+    value on flat-push plans) keeps version-1 JSON round-tripping.
     """
     level: int
     cap_edge: int
@@ -63,6 +68,7 @@ class RoundSpec(NamedTuple):
     cap_push: int
     ghost: bool
     sentinel: bool = False
+    cap_push_col: int = 0
 
 
 class GhostPlan(NamedTuple):
@@ -116,9 +122,11 @@ class RoundPlan(NamedTuple):
     ghost: Optional[GhostPlan]
     level_bounds: Tuple[Tuple[float, float], ...]
     rounds: Tuple[RoundSpec, ...]
-    # trailing with a default so version-1 JSON written before the lever
-    # existed still round-trips (absent key -> jnp comparator path)
+    # trailing with defaults so version-1 JSON written before the levers
+    # existed still round-trips (absent key -> jnp comparator path /
+    # flat push)
     pallas_minedges: bool = False
+    grid_push: bool = False
 
     # -- structure ---------------------------------------------------------
 
@@ -175,9 +183,15 @@ class RoundPlan(NamedTuple):
                  "cap_contract": self.label_capacity_full,
                  "cap_relabel": self.label_capacity_full,
                  "cap_push": self.label_capacity_full}
+        # the deputy-hop capacity's ceiling is one copy of every owned
+        # root per source column; the plan does not know the mesh's
+        # column count, so label_full * num_shards is the safe ceiling
+        col_full = self.label_capacity_full * self.num_shards
         rounds = tuple(
             r._replace(**{f: up(getattr(r, f), fulls[f])
-                          for f in _CAP_FIELDS})
+                          for f in _CAP_FIELDS},
+                       cap_push_col=(up(r.cap_push_col, col_full)
+                                     if r.cap_push_col > 0 else 0))
             for r in self.rounds)
         ghost = self.ghost
         if ghost is not None:
@@ -218,7 +232,8 @@ class RoundPlan(NamedTuple):
             adaptive_doubling=self.adaptive_doubling,
             relabel_skip=self.relabel_skip,
             vsorted_index=self.vsorted_index,
-            pallas_minedges=self.pallas_minedges)
+            pallas_minedges=self.pallas_minedges,
+            grid_push=self.grid_push)
 
     # -- serialization -----------------------------------------------------
 
@@ -251,7 +266,8 @@ def plan_cache_key(family: str, n: int, num_shards: int,
                    adaptive_doubling: bool = True,
                    relabel_skip: bool = True,
                    vsorted_index: bool = True,
-                   pallas_minedges: bool = False) -> str:
+                   pallas_minedges: bool = False,
+                   grid_push: bool = False) -> str:
     """Stable plan-cache key: (family, n, edge-cap rung, algorithm,
     levers).
 
@@ -262,14 +278,16 @@ def plan_cache_key(family: str, n: int, num_shards: int,
     one key → one measured plan → one compiled program.  The ghost
     cache is deliberately absent: whether a plan carries ghost tables
     is derived deterministically from these inputs and the mesh
-    (``ghost_cache`` auto-disable above ``MAX_GHOST_SHARDS``), so
-    including it would only split cache slots that execute identically.
+    (``ghost_cache`` auto-disable above the ghost shard limit), so
+    including it would only split cache slots that execute identically;
+    ``grid_push`` *is* a key bit because the flat and two-level pushes
+    compile to different collectives at the same shape (ISSUE 10).
     """
     levers = "".join(
         "1" if f else "0"
         for f in (local_preprocessing, coalesce, src_only,
                   adaptive_doubling, relabel_skip, vsorted_index,
-                  pallas_minedges))
+                  pallas_minedges, grid_push))
     return (f"{family}|n{int(n)}|p{int(num_shards)}|c{int(cap_per_shard)}"
             f"|{algorithm}|{schedule}|{levers}")
 

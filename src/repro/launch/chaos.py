@@ -228,6 +228,64 @@ def run_matrix(families, n: int, seed: int, batched: bool,
     return cells
 
 
+# deputy-hop faults (ISSUE 10): the grid ghost push routes every dirty
+# label through an intermediate rank, so a fault on EITHER leg must
+# surface through the same detected-or-tolerated contract as the flat
+# push.  corrupt is omitted on purpose: the push payload is int32
+# (vid, parent) and the bit-flip hook only touches float32 lanes.
+GRID_FAULT_MATRIX: Tuple[Tuple[str, faults.FaultSpec], ...] = (
+    ("drop", faults.FaultSpec(kind="drop", site="ghost_push_col",
+                              fraction=0.5)),
+    ("drop", faults.FaultSpec(kind="drop", site="ghost_push_row",
+                              fraction=0.5)),
+    ("shuffle_dest", faults.FaultSpec(kind="shuffle_dest",
+                                      site="ghost_push_row",
+                                      fraction=1.0)),
+    ("stall", faults.FaultSpec(kind="stall", site="ghost_push_col",
+                               shard=0)),
+)
+
+
+def run_grid_push_cells(n: int, seed: int,
+                        verbose: bool = True) -> List[dict]:
+    """Fault cells on the two legs of the grid ghost push (ISSUE 10).
+
+    A (row, col)-factored mesh, a measured plan with the grid lever
+    frozen in, strict ``replan=False`` replay under each
+    ``GRID_FAULT_MATRIX`` spec: a fault on the owner->deputy leg
+    (``ghost_push_row``) or the deputy->rows leg (``ghost_push_col``)
+    must be detected or tolerated, never silent.
+    """
+    devs = np.array(jax.devices())
+    rows = 4 if devs.size % 4 == 0 else 2
+    mesh = Mesh(devs.reshape(rows, devs.size // rows), ("row", "col"))
+    p = devs.size
+    g, km, kw, kc, _, _ = _build("rgg2d", n, p, seed)
+    plan = plan_sharded_msf(g, n, mesh, ghost_push="grid")
+    assert plan.grid_push and plan.ghost is not None, \
+        "grid-push chaos needs the ghost cache live on the grid rung"
+    out0 = execute_plan(g, n, mesh, plan, replan=False)
+    base_mask = np.asarray(out0[0])
+    assert _oracle_identical(g, base_mask, km), \
+        "grid-push fault-free baseline != Kruskal oracle"
+    cells: List[dict] = []
+    for fault, spec in GRID_FAULT_MATRIX:
+        verdict, why, injected = _classify(
+            g, n, mesh, plan, spec, seed, base_mask, kw, kc)
+        cells.append({"fault": fault, "family": "rgg2d",
+                      "path": f"grid_push:{spec.site}",
+                      "verdict": verdict, "why": why,
+                      "injected_items": injected})
+        if verbose:
+            print(f"  {fault:<12} rgg2d  {spec.site:<14} -> {verdict}"
+                  f"  ({why[:80]})")
+    # injection must not perturb the fault-free grid path either
+    out = execute_plan(g, n, mesh, plan, replan=False)
+    assert np.array_equal(np.asarray(out[0]), base_mask), \
+        "fault-free grid push perturbed after the fault cells"
+    return cells
+
+
 def run_recovery_cells(families, n: int, seed: int, ckpt_every: int = 2,
                        elastic: bool = True,
                        verbose: bool = True) -> List[dict]:
@@ -355,6 +413,9 @@ def main() -> None:
           f"p={jax.device_count()}")
     cells = run_matrix(("gnm", "rgg2d"), n, args.seed,
                        batched=not args.smoke)
+    print(f"grid push: {len(GRID_FAULT_MATRIX)} deputy-hop cells on a "
+          "(row, col) mesh")
+    cells += run_grid_push_cells(n, args.seed)
     silent = [c for c in cells if c["verdict"] == "SILENT"]
     counts = {v: sum(1 for c in cells if c["verdict"] == v)
               for v in ("detected", "tolerated", "SILENT")}

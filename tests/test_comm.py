@@ -244,9 +244,82 @@ print("OK")
 """
 
 
+GRID_SCATTER = """
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
+from repro.comm.exchange import (ExchangeStats, scatter_updates,
+                                 scatter_updates_grid)
+
+# two-level grid multicast (ISSUE 10): on a (4, 2) mesh every
+# (item, row-bit, col-bit) cross-product copy must be delivered exactly
+# once at overflow 0, and the stats must book the two legs distinctly —
+# C*cap_row + R*cap_col slots, never the flat p*cap.
+devices = np.array(jax.devices())
+R, C = 4, 2
+mesh = Mesh(devices.reshape(R, C), ("row", "col"))
+p, L = R * C, 32
+cap_row, cap_col = L * C, L * C * R   # generous: zero overflow expected
+rng = np.random.default_rng(11)
+payload = rng.integers(0, 1000, (p * L,)).astype(np.int32)
+rmask = rng.integers(0, 2 ** R, (p * L,)).astype(np.int32)
+cmask = rng.integers(0, 2 ** C, (p * L,)).astype(np.int32)
+valid = rng.random(p * L) < 0.7
+
+def push(pl, rm, cm, va):
+    upd = scatter_updates_grid(pl, rm, cm, va, cap_row, cap_col,
+                               ("row", "col"),
+                               stats=ExchangeStats.zeros())
+    got = jax.lax.psum(jnp.where(upd.recv_ok, upd.recv, 0).sum(),
+                       ("row", "col"))
+    ndel = jax.lax.psum(upd.recv_ok.sum(), ("row", "col"))
+    return (upd.overflow, got, ndel, upd.stats.calls, upd.stats.items,
+            upd.stats.slots)
+
+f = shard_map(push, mesh=mesh, in_specs=(P(("row", "col")),) * 4,
+              out_specs=(P(),) * 6)
+ovf, got, ndel, calls, items, slots = [
+    int(x) if x.dtype != jnp.float32 else float(x)
+    for x in f(jnp.asarray(payload), jnp.asarray(rmask),
+               jnp.asarray(cmask), jnp.asarray(valid))]
+# delivery set = cross product of the two masks
+copies = sum(bin(r).count("1") * bin(c).count("1")
+             for r, c, va in zip(rmask, cmask, valid) if va)
+psum = sum(int(pl) * bin(r).count("1") * bin(c).count("1")
+           for pl, r, c, va in zip(payload, rmask, cmask, valid) if va)
+assert ovf == 0, ovf
+assert ndel == copies, (ndel, copies)
+assert got == psum, (got, psum)
+# two legs booked distinctly: hop 1 re-admits per column, hop 2 per row
+assert slots == C * cap_row + R * cap_col, slots
+# hop 1 ships payload + row mask + validity, hop 2 payload + validity
+assert calls == 3 + 2, calls
+# items counts BOTH legs' admissions (the deputy leg's real traffic):
+# hop 1 one copy per subscribed column, hop 2 the full cross product
+hop1 = sum(bin(c).count("1") for c, va in zip(cmask, valid) if va)
+assert items == hop1 + copies, (items, hop1, copies)
+
+# satellite: the FLAT scatter on the same 2-axis mesh books the grid
+# schedule's per-hop re-admission — p * cap * 2 slots, not p * cap
+fmask = rng.integers(0, 2 ** p, (p * L,)).astype(np.int32)
+
+def flat(pl, mk, va):
+    upd = scatter_updates(pl, mk, va, L, ("row", "col"), "grid",
+                          stats=ExchangeStats.zeros())
+    return (upd.stats.slots,)
+
+(fslots,) = shard_map(flat, mesh=mesh,
+                      in_specs=(P(("row", "col")),) * 3,
+                      out_specs=(P(),))(
+    jnp.asarray(payload), jnp.asarray(fmask), jnp.asarray(valid))
+assert float(fslots) == p * L * 2, float(fslots)
+print("OK")
+"""
+
+
 @pytest.mark.parametrize("name,script", [
     ("grid_eq", GRID_EQ), ("exchange", EXCHANGE), ("sort", SORT),
-    ("stats_conservation", STATS_CONSERVATION)])
+    ("stats_conservation", STATS_CONSERVATION),
+    ("grid_scatter", GRID_SCATTER)])
 def test_comm(name, script):
     out = run_multidevice(script, ndev=8)
     assert "OK" in out
@@ -283,3 +356,49 @@ def test_scatter_mask_width_to_31_shards():
     assert got[2, 30] and got[2, :30].sum() == 0
     # every destination of the full mask is hit: no sign-extension loss
     assert got[1].all()
+
+
+def test_axis_masks_to_copies_961_shard_contract():
+    """ISSUE 10 satellite: the per-axis sibling of ``_mask_to_copies``.
+
+    Pure bit arithmetic, no mesh: the (row mask, col mask) pair must
+    expand to independent per-axis copy matrices whose outer product
+    addresses the full 31 x 31 = 961-shard envelope — bit 30 usable on
+    *both* axes, empty subscriber sets on either axis killing the cross
+    product, and the widths exactly (L, r) / (L, c).
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.comm.exchange import _axis_masks_to_copies
+
+    rng = np.random.default_rng(12)
+    L, r, c = 64, 31, 31
+    rmask = rng.integers(0, 1 << 31, L, dtype=np.int64)
+    cmask = rng.integers(0, 1 << 31, L, dtype=np.int64)
+    # corner rows: both empty; full x full (the 961-shard envelope);
+    # bit 30 on both axes; row-empty with cols set (dead cross product)
+    rmask[0], cmask[0] = 0, 0
+    rmask[1], cmask[1] = (1 << 31) - 1, (1 << 31) - 1
+    rmask[2], cmask[2] = 1 << 30, 1 << 30
+    rmask[3], cmask[3] = 0, (1 << 31) - 1
+    rmask, cmask = rmask.astype(np.int32), cmask.astype(np.int32)
+    valid = rng.random(L) < 0.8
+    valid[1] = valid[2] = valid[3] = True
+    rc, cc = _axis_masks_to_copies(
+        jnp.asarray(rmask), jnp.asarray(cmask), jnp.asarray(valid), r, c)
+    rc, cc = np.asarray(rc), np.asarray(cc)
+    assert rc.shape == (L, r) and cc.shape == (L, c)
+    lanes = np.arange(31)
+    exp_r = valid[:, None] & (
+        ((rmask.astype(np.int64)[:, None] >> lanes) & 1) > 0)
+    exp_c = valid[:, None] & (
+        ((cmask.astype(np.int64)[:, None] >> lanes) & 1) > 0)
+    assert np.array_equal(rc, exp_r) and np.array_equal(cc, exp_c)
+    # the outer product of the full masks covers all 961 shards
+    assert int(rc[1].sum()) * int(cc[1].sum()) == 961
+    # bit 30 works on both axes: exactly shard (30, 30)
+    assert rc[2, 30] and cc[2, 30]
+    assert rc[2].sum() == 1 and cc[2].sum() == 1
+    # an empty row mask means zero deliveries no matter the col mask
+    assert rc[3].sum() == 0 and cc[3].sum() == c

@@ -201,6 +201,123 @@ def test_sharded_pallas_plan_replay_verified():
     assert "OK" in out
 
 
+# ISSUE 10: the two-level grid ghost push.  On a (4, 2) mesh every
+# family must be bit-identical across flat push x grid push x the
+# public dispatch default, the ghost_shard_limit ladder must step
+# grid -> flat -> no-ghost without changing a single mask bit, and the
+# grid lever must survive the RoundPlan JSON round-trip, show up in
+# plan_cache_key, and replay strictly (replan=False) bit-identical.
+SHARDED_GRID_PUSH = inspect.getsource(graph_families) + """
+from jax.sharding import Mesh
+from repro.core import oracle
+from repro.core.distributed import build_dist_graph
+from repro.core.distributed_sharded import (distributed_sharded_msf,
+                                            execute_plan, plan_sharded_msf)
+from repro.core.graph import from_numpy
+from repro.core.mst import minimum_spanning_forest
+from repro.core.plan import RoundPlan
+
+mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("row", "col"))
+AX = ("row", "col")
+
+for fam in ("random", "dup_weights", "disconnected"):
+    u, v, w, n = FAMILIES[fam](0)
+    edges = from_numpy(u, v, w, n)
+    kmask, kweight = oracle.kruskal(u, v, w, n)
+    ref = None
+    for push in (None, "flat", "grid"):
+        mask, wt = minimum_spanning_forest(
+            edges, algorithm="boruvka", engine="distributed_sharded",
+            mesh=mesh, axis_names=AX, ghost_push=push)
+        mk = np.asarray(mask)
+        assert np.array_equal(np.nonzero(mk)[0], np.nonzero(kmask)[0]), (
+            fam, push, "edge set differs from oracle")
+        assert abs(float(wt) - kweight) < 1e-3 * max(1.0, kweight), (
+            fam, push, float(wt), kweight)
+        if ref is None:
+            ref = mk
+        assert np.array_equal(mk, ref), (fam, push, "flat/grid drift")
+
+# ghost_shard_limit fallback ladder on the same 2-axis mesh: a limit
+# of 31 fits p=8 in one flat mask (no grid rounds), 7 forces the grid
+# rung (4 <= 7 and 2 <= 7 but p=8 > 7), 1 disables the cache entirely
+# (rows 4 > 1) — every rung bit-identical, overflow 0
+u, v, w, n = FAMILIES["random"](1)
+g, cap = build_dist_graph(u, v, w, n, 8)
+kmask, _ = oracle.kruskal(u, v, w, n)
+ksel = np.nonzero(kmask)[0]
+base = None
+for lim, expect_hits, expect_grid in ((31, True, False),
+                                      (7, True, True),
+                                      (1, False, False)):
+    tr = []
+    res = distributed_sharded_msf(g, n, mesh, axis_names=AX,
+                                  ghost_shard_limit=lim, round_trace=tr)
+    assert int(res[4]) == 0, (lim, int(res[4]))
+    sel = np.unique(np.asarray(g.eid)[np.asarray(res[0])])
+    assert np.array_equal(sel, ksel), (lim, "edge set != oracle")
+    if base is None:
+        base = np.asarray(res[0])
+    assert np.array_equal(np.asarray(res[0]), base), (lim, "ladder drift")
+    hits = float(res[5].hits)
+    assert (hits > 0) == expect_hits, (lim, hits)
+    grid_rounds = any(t.get("grid_push") for t in tr)
+    assert grid_rounds == expect_grid, (lim, grid_rounds)
+
+# the plan lever: measured grid plan carries per-round deputy
+# capacities, round-trips to_json/from_json, keys differently from the
+# flat plan, and replays strictly bit-identical (incl. after pad())
+plan = plan_sharded_msf(g, n, mesh, axis_names=AX, ghost_push="grid")
+assert plan.grid_push
+assert any(r.cap_push_col > 0 for r in plan.rounds)
+rt = RoundPlan.from_json(plan.to_json())
+assert rt == plan, "grid lever lost in the JSON round-trip"
+assert plan.cache_key("x") != plan._replace(grid_push=False).cache_key("x")
+for p2 in (rt, rt.pad(0.25)):
+    res = execute_plan(g, n, mesh, p2, axis_names=AX, replan=False)
+    assert int(res[4]) == 0
+    assert np.array_equal(np.asarray(res[0]), base), "replay drift"
+print("OK")
+"""
+
+
+def test_sharded_grid_push_matrix():
+    out = run_multidevice(SHARDED_GRID_PUSH, ndev=8, timeout=1800)
+    assert "OK" in out
+
+
+# p = 32 (8 x 4) — impossible at seed: the flat int32 subscriber mask
+# caps the ghost cache at 31 shards, so before ISSUE 10 the cache was
+# forced off here.  The auto ladder must now pick the grid push, keep
+# the cache live (hits > 0), and stay bit-identical to the oracle.
+SHARDED_GRID_P32 = """
+from jax.sharding import Mesh
+from repro.core import oracle
+from repro.core.distributed import build_dist_graph
+from repro.core.distributed_sharded import distributed_sharded_msf
+from repro.data import generators
+
+mesh = Mesh(np.array(jax.devices()).reshape(8, 4), ("row", "col"))
+u, v, w, n = generators.generate("rgg2d", 1024, avg_degree=8.0, seed=7)
+g, cap = build_dist_graph(u, v, w, n, 32)
+kmask, _ = oracle.kruskal(u, v, w, n)
+tr = []
+res = distributed_sharded_msf(g, n, mesh, axis_names=("row", "col"),
+                              round_trace=tr)
+assert int(res[4]) == 0, int(res[4])
+sel = np.unique(np.asarray(g.eid)[np.asarray(res[0])])
+assert np.array_equal(sel, np.nonzero(kmask)[0]), "edge set != oracle"
+assert float(res[5].hits) > 0, "cache must be live at p=32"
+assert any(t["grid_push"] for t in tr), "auto ladder must pick grid"
+print("OK")
+"""
+
+
+def test_sharded_grid_push_p32_oracle():
+    out = run_multidevice(SHARDED_GRID_P32, ndev=32, timeout=1800)
+    assert "OK" in out
+
+
 @settings(max_examples=40, deadline=None)
 @given(st.data())
 def test_property_random_graphs_match_oracle(data):

@@ -127,3 +127,63 @@ def test_planned_program_counters_match_hlo():
     as the replicated engine."""
     out = run_multidevice(PLAN_CROSSCHECK, ndev=8, timeout=900)
     assert "OK" in out
+
+
+PUSH_CROSSCHECK = """
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.core import oracle
+from repro.core.distributed import build_dist_graph
+from repro.core.distributed_sharded import (make_sharded_mst_step,
+                                            plan_sharded_msf)
+from repro.launch.roofline import collective_bytes_from_hlo
+from repro.data import generators
+
+# ISSUE 10 satellite: the ghost PUSH path's accounting, both shapes of
+# it, against the HLO parser.  Two unrolled planned programs on the
+# same (4, 2) mesh — flat push (one [p, cap] multicast) and grid push
+# (owner->deputy [C, cap_row] then deputy->rows [R, cap_col]) — each
+# must keep ExchangeStats bytes/calls within the standard band of the
+# compiled module's trip-weighted all-to-alls.  A deputy leg booked
+# zero times (or twice) lands far outside 0.7..1.5.
+p = 8
+mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("row", "col"))
+AX = ("row", "col")
+sh = NamedSharding(mesh, P(AX))
+u, v, w, n = generators.generate("gnm", 512, avg_degree=8.0, seed=3)
+g, cap = build_dist_graph(u, v, w, n, p)
+kmask, _ = oracle.kruskal(u, v, w, n)
+
+for push in ("flat", "grid"):
+    plan = plan_sharded_msf(g, n, mesh, axis_names=AX,
+                            local_preprocessing=False,
+                            adaptive_doubling=False, ghost_push=push)
+    assert plan.ghost is not None, push  # the push path must be live
+    assert plan.grid_push == (push == "grid")
+    step, specs = make_sharded_mst_step(n, g.cap_total, mesh, plan=plan,
+                                        axis_names=AX)
+    compiled = jax.jit(step, in_shardings=(sh,) * 4).lower(*specs).compile()
+    out = compiled(g.u, g.v, g.w, g.eid)
+    assert int(out[4]) == 0, (push, int(out[4]))
+    sel = np.unique(np.asarray(g.eid)[np.asarray(out[0])])
+    assert np.array_equal(sel, np.nonzero(kmask)[0]), push
+    st = out[5]
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    ratio = coll["all-to-all_bytes"] / float(st.bytes)
+    calls_ratio = coll["all-to-all_count"] / float(int(st.calls))
+    print(push, "analytic_bytes", float(st.bytes),
+          "hlo_bytes", coll["all-to-all_bytes"], "ratio", round(ratio, 4),
+          "calls", int(st.calls), "hlo_count", coll["all-to-all_count"],
+          "calls_ratio", round(calls_ratio, 4))
+    assert 0.7 < ratio < 1.5, (push, float(st.bytes),
+                               coll["all-to-all_bytes"], ratio)
+    assert 0.7 < calls_ratio < 1.5, (push, int(st.calls),
+                                     coll["all-to-all_count"])
+print("OK")
+"""
+
+
+def test_push_path_counters_match_hlo():
+    """ISSUE 10 satellite: HLO-parsed all-to-all bytes vs the analytic
+    counters on the ghost push path, flat and grid."""
+    out = run_multidevice(PUSH_CROSSCHECK, ndev=8, timeout=900)
+    assert "OK" in out
